@@ -1,0 +1,58 @@
+"""Remark-1 communication-overhead table (paper Eq. 17).
+
+One row per model: Phi_local, Phi_off, Phi_PHSFL vs Phi_HFL per edge round,
+and the savings ratio.  Covers the paper's CNN and all 10 assigned LM
+architectures (cut after n_client_layers blocks, seq 4096 activations).
+"""
+
+from __future__ import annotations
+
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.configs.registry import ARCHS, get_arch
+from repro.core import comm_for_cnn, comm_for_lm
+
+KAPPA0 = 5
+
+
+def rows():
+    out = []
+    cm = comm_for_cnn(CNN_CFG, dataset_size=500)
+    out.append(("phsfl-cnn", cm, KAPPA0))
+    for name in sorted(ARCHS):
+        cfg = get_arch(name)
+        cm = comm_for_lm(cfg, seq_len=4096, dataset_size=100_000)
+        out.append((name, cm, KAPPA0))
+    return out
+
+
+def table() -> list[dict]:
+    recs = []
+    for name, cm, k0 in rows():
+        phsfl = cm.phi_phsfl_bits(k0)
+        hfl = cm.phi_hfl_bits()
+        recs.append({
+            "model": name,
+            "Z_total": cm.total_params,
+            "Z_client": cm.client_params,
+            "Zc_per_sample": cm.cut_size,
+            "phi_local_Mbit": cm.phi_local_bits() / 1e6,
+            "phi_off_Mbit": cm.phi_off_bits() / 1e6,
+            "phi_phsfl_Mbit": phsfl / 1e6,
+            "phi_hfl_Mbit": hfl / 1e6,
+            "hfl_over_phsfl": hfl / phsfl,
+            "phsfl_wins": bool(hfl > phsfl),
+        })
+    return recs
+
+
+def main():
+    print(f"{'model':24s} {'Z_total':>14s} {'Z_client':>12s} "
+          f"{'PHSFL Mbit':>12s} {'HFL Mbit':>14s} {'HFL/PHSFL':>10s} win")
+    for r in table():
+        print(f"{r['model']:24s} {r['Z_total']:14,d} {r['Z_client']:12,d} "
+              f"{r['phi_phsfl_Mbit']:12.1f} {r['phi_hfl_Mbit']:14.1f} "
+              f"{r['hfl_over_phsfl']:10.2f} {r['phsfl_wins']}")
+
+
+if __name__ == "__main__":
+    main()

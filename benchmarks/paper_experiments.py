@@ -1,0 +1,145 @@
+"""Paper reproduction driver (Figs. 1-4 + Sec. V-B numbers).
+
+Runs PHSFL and the HSFL baseline on Dirichlet-partitioned synthetic
+federated image data (CIFAR-10 is not available offline; see EXPERIMENTS.md
+§Paper-validation for the comparability caveat), plus the centralized Genie
+baseline, at Dir(0.1) and Dir(0.5).  Reports:
+
+  - Fig. 1 analogue: per-client test-accuracy dispersion of the global model
+    (mean / max / min);
+  - Figs. 3-4 analogue: global vs personalized accuracy per algorithm and
+    skew level;
+  - Sec. V-B analogue: PHSFL-vs-HSFL personalized improvement.
+
+The paper's full scale is U=100, B=4, kappa0=5, kappa1=3, R=100, eta=0.01,
+N=32.  Defaults below use the same topology with fewer rounds/minibatches
+(CPU budget); pass --full for the paper's schedule.
+
+Usage: PYTHONPATH=src python -m benchmarks.paper_experiments [--rounds R]
+Writes experiments/paper/results.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.configs.base import HierarchyConfig, TrainConfig
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.core.fedsim import FedSim, centralized_sgd
+from repro.data.synthetic import make_federated_image_data
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "experiments", "paper")
+
+
+def run_suite(*, rounds: int, batches_per_epoch: int, num_clients: int,
+              num_es: int, kappa0: int, kappa1: int, lr: float,
+              batch_size: int, finetune_steps: int, seed: int,
+              alphas=(0.1, 0.5), train_per_class: int = 500,
+              test_per_class: int = 100, dump_path: str | None = None) -> dict:
+    results: dict = {"config": {
+        "rounds": rounds, "batches_per_epoch": batches_per_epoch,
+        "num_clients": num_clients, "num_es": num_es, "kappa0": kappa0,
+        "kappa1": kappa1, "lr": lr, "batch_size": batch_size,
+        "finetune_steps": finetune_steps, "seed": seed,
+        "dataset": "synthetic class-conditional (no CIFAR-10 offline)",
+    }, "runs": {}}
+
+    for alpha in alphas:
+        data = make_federated_image_data(
+            num_clients, alpha=alpha, train_per_class=train_per_class,
+            test_per_class=test_per_class, seed=seed)
+        h = HierarchyConfig(num_edge_servers=num_es,
+                            clients_per_es=num_clients // num_es,
+                            kappa0=kappa0, kappa1=kappa1,
+                            global_rounds=rounds)
+        for algo, freeze in (("phsfl", True), ("hsfl", False)):
+            t0 = time.time()
+            t = TrainConfig(learning_rate=lr, batch_size=batch_size,
+                            freeze_head=freeze,
+                            finetune_steps=finetune_steps, finetune_lr=lr)
+            sim = FedSim(CNN_CFG, data, h, t,
+                         batches_per_epoch=batches_per_epoch, seed=seed)
+            res = sim.run(rounds=rounds, log_every=max(rounds // 4, 1))
+            heads, per = sim.personalize(res.global_params)
+            g = res.per_client_global
+            rec = {
+                "alpha": alpha, "algo": algo,
+                "history": res.history,
+                # Fig. 1 analogue: dispersion of the global model
+                "global_acc_mean": float(g["acc"].mean()),
+                "global_acc_max": float(g["acc"].max()),
+                "global_acc_min": float(g["acc"].min()),
+                "global_loss_mean": float(g["loss"].mean()),
+                # Figs. 3-4 analogue
+                "personalized_acc_mean": float(per["acc"].mean()),
+                "personalized_acc_max": float(per["acc"].max()),
+                "personalized_acc_min": float(per["acc"].min()),
+                "personalized_loss_mean": float(per["loss"].mean()),
+                "wall_s": round(time.time() - t0, 1),
+            }
+            results["runs"][f"{algo}_dir{alpha}"] = rec
+            if dump_path:  # incremental dump so partial results survive
+                with open(dump_path, "w") as f:
+                    json.dump(results, f, indent=1)
+            print(f"[paper] {algo} Dir({alpha}): global "
+                  f"{rec['global_acc_mean']:.4f} "
+                  f"(min {rec['global_acc_min']:.4f} / max "
+                  f"{rec['global_acc_max']:.4f})  personalized "
+                  f"{rec['personalized_acc_mean']:.4f}  "
+                  f"[{rec['wall_s']}s]", flush=True)
+
+        # centralized Genie (once per alpha's dataset)
+        t = TrainConfig(learning_rate=lr, batch_size=batch_size)
+        _, genie = centralized_sgd(CNN_CFG, data, t,
+                                   epochs=max(rounds // 10, 2), seed=seed)
+        results["runs"][f"centralized_dir{alpha}"] = genie
+        print(f"[paper] centralized Dir({alpha}): acc {genie['acc']:.4f}",
+              flush=True)
+
+    # derived headline numbers (Sec. V-B analogues)
+    for alpha in alphas:
+        p = results["runs"][f"phsfl_dir{alpha}"]
+        hh = results["runs"][f"hsfl_dir{alpha}"]
+        results["runs"][f"summary_dir{alpha}"] = {
+            "phsfl_over_hsfl_personalized_acc_gain":
+                p["personalized_acc_mean"] - hh["personalized_acc_mean"],
+            "phsfl_personalization_gain":
+                p["personalized_acc_mean"] - p["global_acc_mean"],
+            "hsfl_personalization_gain":
+                hh["personalized_acc_mean"] - hh["global_acc_mean"],
+            "generalization_gap_phsfl_minus_hsfl":
+                p["global_acc_mean"] - hh["global_acc_mean"],
+        }
+    return results
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=30)
+    ap.add_argument("--batches-per-epoch", type=int, default=2)
+    ap.add_argument("--clients", type=int, default=100)
+    ap.add_argument("--full", action="store_true",
+                    help="paper schedule: R=100, 5 minibatches/epoch")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=os.path.join(OUT, "results.json"))
+    args = ap.parse_args(argv)
+
+    rounds = 100 if args.full else args.rounds
+    bpe = 5 if args.full else args.batches_per_epoch
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    res = run_suite(rounds=rounds, batches_per_epoch=bpe,
+                    num_clients=args.clients, num_es=4, kappa0=5, kappa1=3,
+                    lr=0.01 if args.full else 0.02, batch_size=32,
+                    finetune_steps=10, seed=args.seed, dump_path=args.out)
+    with open(args.out, "w") as f:
+        json.dump(res, f, indent=1)
+    print(f"[paper] wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

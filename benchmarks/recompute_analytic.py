@@ -1,0 +1,85 @@
+"""Recompute the analytic roofline fields of every experiments/dryrun JSON
+with the CURRENT launch/analytic.py cost model (the HLO fields from the
+actual compile are preserved untouched).
+
+Needed because the analytic model evolved during the sweeps (attention
+baseline switched from optimistic causal-half to the masked-rectangle cost
+that matches the pure-JAX implementation); this keeps the whole table
+consistent without re-lowering 70+ combos.
+
+    PYTHONPATH=src python -m benchmarks.recompute_analytic
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs.base import TrainConfig
+from repro.configs.registry import get_arch
+from repro.configs.shapes import SHAPES
+from repro.launch.analytic import cost_for
+from repro.launch.roofline import HBM_BW, ICI_BW, PEAK_FLOPS, model_flops_for
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments", "dryrun")
+
+MESH_SHAPES = {
+    "single": {"data": 16, "model": 16},
+    "multipod": {"pod": 2, "data": 16, "model": 16},
+    "alt32x8": {"data": 32, "model": 8},
+}
+
+
+def variant_kwargs(fname: str, rec: dict) -> dict:
+    kw: dict = {}
+    if "__shared_server" in fname:
+        kw["mode"] = "shared_server"
+    if "__tp" in fname and "__fsdp" not in fname:
+        kw["param_mode"] = "tp"
+    if "__aggbfloat16" in fname:
+        kw["agg_dtype_bytes"] = 2
+    tc = {}
+    if "__noremat" in fname:
+        tc["remat"] = False
+    if "__remat_dots" in fname:
+        tc["remat_policy"] = "dots"
+    if "__k4" in fname:
+        tc["local_steps_in_step"] = 4
+    if tc:
+        kw["tcfg"] = TrainConfig(**tc)
+    return kw
+
+
+def main():
+    n = 0
+    for f in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(f) as fh:
+            rec = json.load(fh)
+        fname = os.path.basename(f)
+        cfg = get_arch(rec["arch"])
+        shape = SHAPES[rec["shape"]]
+        mesh_shape = MESH_SHAPES[rec["mesh"]]
+        kw = variant_kwargs(fname, rec)
+        ac = cost_for(cfg, shape, mesh_shape, **kw)
+        rec["flops_per_chip"] = ac.flops
+        rec["hbm_bytes_per_chip"] = ac.hbm_bytes
+        rec["collective_bytes_per_chip"] = ac.coll_bytes
+        rec["analytic_detail"] = ac.detail
+        rec["compute_s"] = ac.flops / PEAK_FLOPS
+        rec["memory_s"] = ac.hbm_bytes / HBM_BW
+        rec["collective_s"] = ac.coll_bytes / ICI_BW
+        terms = {"compute": rec["compute_s"], "memory": rec["memory_s"],
+                 "collective": rec["collective_s"]}
+        rec["dominant"] = max(terms, key=terms.get)
+        rec["model_flops"] = model_flops_for(cfg, shape, shape.kind)
+        total = ac.flops * rec["chips"]
+        rec["useful_flops_ratio"] = rec["model_flops"] / total if total else 0
+        with open(f, "w") as fh:
+            json.dump(rec, fh, indent=1)
+        n += 1
+    print(f"recomputed {n} records")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline / §Dry-run tables.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline_table [--markdown]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+MITIGATION = {
+    ("compute",): "shard more / flash-kernel block-skip to cut masked-"
+                  "rectangle waste",
+    ("memory",): "fuse / widen arithmetic intensity; decode: batch more "
+                 "sequences per chip",
+    ("collective",): "lower aggregation frequency (raise kappa0) or switch "
+                     "to shared-server mode (client-block-only all-reduce)",
+}
+
+
+def load(pattern: str = "*") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, f"{pattern}.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def mitigation(rec: dict) -> str:
+    dom = rec["dominant"]
+    if dom == "collective" and rec["shape"].startswith("train"):
+        return MITIGATION[("collective",)]
+    if dom == "collective":
+        return "keep params resident (TP-only serving layout) to kill the " \
+               "FSDP all-gather"
+    return MITIGATION[(dom,)]
+
+
+def fmt_row(r: dict) -> str:
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r.get('train_mode') or '-'} | "
+            f"{r['compute_s']:.3e} | {r['memory_s']:.3e} | "
+            f"{r['collective_s']:.3e} | **{r['dominant']}** | "
+            f"{r['model_flops']:.3e} | {r['useful_flops_ratio']:.2f} | "
+            f"{mitigation(r)} |")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--markdown", action="store_true")
+    ap.add_argument("--pattern", default="*")
+    args = ap.parse_args(argv)
+    recs = load(args.pattern)
+    if args.markdown:
+        print("| arch | shape | mesh | mode | compute s | memory s | "
+              "collective s | dominant | MODEL_FLOPS | useful ratio | "
+              "what moves the dominant term |")
+        print("|" + "---|" * 11)
+        for r in recs:
+            print(fmt_row(r))
+    else:
+        print(f"{'arch':24s} {'shape':12s} {'mesh':8s} {'dom':10s} "
+              f"{'compute_s':>11s} {'memory_s':>11s} {'coll_s':>11s} "
+              f"{'useful':>7s}")
+        for r in recs:
+            print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:8s} "
+                  f"{r['dominant']:10s} {r['compute_s']:11.3e} "
+                  f"{r['memory_s']:11.3e} {r['collective_s']:11.3e} "
+                  f"{r['useful_flops_ratio']:7.2f}")
+    print(f"\n{len(recs)} records")
+
+
+if __name__ == "__main__":
+    main()

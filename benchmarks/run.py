@@ -1,0 +1,95 @@
+"""Benchmark entrypoint: one suite per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything quick
+    PYTHONPATH=src python -m benchmarks.run --suite comm
+
+Prints ``name,us_per_call,derived`` CSV rows per bench; analysis suites
+print their tables.  The long paper-reproduction run and the dry-run sweeps
+are separate entrypoints (benchmarks.paper_experiments, repro.launch.dryrun)
+— this runner reports their saved results if present.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def suite_kernels():
+    from benchmarks.kernel_bench import bench_rows
+    for r in bench_rows():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+
+
+def suite_train():
+    from benchmarks.train_bench import bench_rows
+    for r in bench_rows():
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+
+
+def suite_comm():
+    print("# Remark-1 communication table (Eq. 17)")
+    from benchmarks.comm_table import main as comm_main
+    comm_main()
+
+
+def suite_theory():
+    print("# Theorem-1 bound terms (Eq. 21)")
+    from benchmarks.theory_table import main as theory_main
+    theory_main()
+
+
+def suite_roofline():
+    print("# Roofline table (from experiments/dryrun)")
+    from benchmarks.roofline_table import main as roof_main
+    roof_main([])
+
+
+def suite_paper():
+    """Report saved paper-reproduction results (run separately if absent)."""
+    path = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "paper", "results.json")
+    if not os.path.exists(path):
+        print("paper_experiments,0.0,not_run (PYTHONPATH=src python -m "
+              "benchmarks.paper_experiments)")
+        return
+    with open(path) as f:
+        res = json.load(f)
+    for key, rec in sorted(res["runs"].items()):
+        if key.startswith("summary"):
+            print(f"paper_{key},0.0,{json.dumps(rec)}")
+        elif key.startswith("centralized"):
+            print(f"paper_{key},0.0,acc={rec['acc']:.4f}")
+        else:
+            print(f"paper_{key},0.0,global={rec['global_acc_mean']:.4f};"
+                  f"personalized={rec['personalized_acc_mean']:.4f};"
+                  f"min={rec['global_acc_min']:.4f};"
+                  f"max={rec['global_acc_max']:.4f}")
+
+
+SUITES = {
+    "kernels": suite_kernels,
+    "train": suite_train,
+    "comm": suite_comm,
+    "theory": suite_theory,
+    "roofline": suite_roofline,
+    "paper": suite_paper,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", choices=sorted(SUITES) + ["all"], default="all")
+    args = ap.parse_args(argv)
+    names = sorted(SUITES) if args.suite == "all" else [args.suite]
+    for n in names:
+        print(f"\n=== suite: {n} ===", flush=True)
+        t0 = time.time()
+        SUITES[n]()
+        print(f"=== {n} done in {time.time() - t0:.1f}s ===", flush=True)
+
+
+if __name__ == "__main__":
+    main()

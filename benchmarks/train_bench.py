@@ -1,0 +1,65 @@
+"""CPU-scale training-step microbenches: one PHSFL round + one shared-server
+step on reduced architectures (real execution, single device).  Prints
+name,us_per_call,derived CSV rows."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HierarchyConfig, TrainConfig
+from repro.configs.registry import get_arch
+from repro.core import build_optimizer
+from repro.data.synthetic import synthetic_token_batch
+from repro.models import build_model
+from repro.optim import apply_updates
+
+
+def _time(fn, *args, iters=3) -> float:
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def bench_rows() -> list[tuple[str, float, str]]:
+    rows = []
+    for arch in ("mistral-large-123b", "olmoe-1b-7b", "xlstm-350m",
+                 "recurrentgemma-2b"):
+        cfg = get_arch(arch).reduced()
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        tcfg = TrainConfig(learning_rate=0.01, freeze_head=True)
+        opt, _ = build_optimizer(model, tcfg)
+        state = opt.init(params)
+        nb = synthetic_token_batch(0, 4, 128, cfg.vocab_size)
+        batch = {k: jnp.asarray(v) for k, v in nb.items()}
+
+        @jax.jit
+        def step(params, state, batch):
+            loss, g = jax.value_and_grad(
+                lambda p: model.loss(p, batch))(params)
+            upd, state2 = opt.update(g, state, params)
+            return apply_updates(params, upd), state2, loss
+
+        us = _time(step, params, state, batch)
+        loss = float(step(params, state, batch)[2])
+        tokens = batch["tokens"].size
+        rows.append((f"train_step_{arch}", us,
+                     f"tok_per_s={tokens / (us / 1e6):.0f};loss={loss:.3f}"))
+    return rows
+
+
+def main():
+    for name, us, derived in bench_rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

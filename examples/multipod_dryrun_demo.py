@@ -1,0 +1,26 @@
+"""Lower + compile ONE (arch x shape) on the 512-chip multi-pod production
+mesh and print its memory/cost/roofline analysis.
+
+    PYTHONPATH=src python examples/multipod_dryrun_demo.py \
+        [--arch gemma3-12b] [--shape train_4k]
+
+(This re-execs repro.launch.dryrun so the 512-device XLA flag is set before
+jax initializes.)
+"""
+
+import argparse
+import os
+import subprocess
+import sys
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma3-12b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--mesh", default="multipod", choices=["single", "multipod"])
+    args = ap.parse_args()
+    env = dict(os.environ)
+    env.setdefault("PYTHONPATH", "src")
+    sys.exit(subprocess.call(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", args.arch,
+         "--shape", args.shape, "--mesh", args.mesh], env=env))

@@ -1,0 +1,16 @@
+"""Serve a reduced model with batched requests and per-request personalized
+heads (the PHSFL head bank).
+
+    PYTHONPATH=src python examples/serve_personalized.py [--arch xlstm-350m]
+"""
+
+import argparse
+
+from repro.launch.serve import main as serve_main
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="xlstm-350m")
+    args = ap.parse_args()
+    serve_main(["--arch", args.arch, "--batch", "4", "--steps", "12",
+                "--clients", "3"])

@@ -1,0 +1,59 @@
+"""Flat-npz pytree checkpointing (no external deps).
+
+Leaves are stored under their '/'-joined key paths; restore rebuilds into a
+caller-provided target structure (so dtypes/shardings can be re-imposed by
+the caller — sharded restore re-uses jax.device_put with the target's
+sharding).
+"""
+
+from __future__ import annotations
+
+import os
+import re
+
+import jax
+import numpy as np
+
+from repro.utils.tree import path_str
+
+
+def _flatten(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {path_str(p): np.asarray(v) for p, v in flat}
+
+
+def save_checkpoint(directory: str, step: int, tree) -> str:
+    os.makedirs(directory, exist_ok=True)
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    tmp = path + ".tmp.npz"  # np.savez appends .npz unless already present
+    np.savez(tmp, **_flatten(tree))
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = []
+    for f in os.listdir(directory):
+        m = re.fullmatch(r"ckpt_(\d+)\.npz", f)
+        if m:
+            steps.append(int(m.group(1)))
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, step: int, target):
+    """Restore into the structure of ``target`` (shapes must match)."""
+    path = os.path.join(directory, f"ckpt_{step:08d}.npz")
+    with np.load(path) as data:
+        flat, treedef = jax.tree_util.tree_flatten_with_path(target)
+        leaves = []
+        for p, tgt in flat:
+            key = path_str(p)
+            if key not in data:
+                raise KeyError(f"checkpoint missing {key}")
+            arr = data[key]
+            if tuple(arr.shape) != tuple(tgt.shape):
+                raise ValueError(f"{key}: shape {arr.shape} != {tgt.shape}")
+            leaves.append(arr.astype(tgt.dtype))
+    return jax.tree_util.tree_unflatten(treedef, [v for _, v in zip(flat, leaves)])

@@ -1,0 +1,28 @@
+from repro.configs.base import (
+    ModelConfig,
+    MoEConfig,
+    MLAConfig,
+    EncDecConfig,
+    VLMConfig,
+    XLSTMConfig,
+    RGLRUConfig,
+    HierarchyConfig,
+    TrainConfig,
+    ShapeConfig,
+    MeshConfig,
+    ATTN,
+    LOCAL_ATTN,
+    MLA_ATTN,
+    RGLRU,
+    SLSTM,
+    MLSTM,
+    RECURRENT_KINDS,
+)
+
+__all__ = [
+    "ModelConfig", "MoEConfig", "MLAConfig", "EncDecConfig", "VLMConfig",
+    "XLSTMConfig", "RGLRUConfig", "HierarchyConfig", "TrainConfig",
+    "ShapeConfig", "MeshConfig",
+    "ATTN", "LOCAL_ATTN", "MLA_ATTN", "RGLRU", "SLSTM", "MLSTM",
+    "RECURRENT_KINDS",
+]

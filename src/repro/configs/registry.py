@@ -1,0 +1,54 @@
+"""Architecture registry: ``--arch <id>`` resolution."""
+
+from __future__ import annotations
+
+from repro.configs.base import ModelConfig
+from repro.configs import (
+    command_r_plus_104b,
+    olmoe_1b_7b,
+    mistral_large_123b,
+    qwen2_vl_7b,
+    xlstm_350m,
+    gemma3_27b,
+    recurrentgemma_2b,
+    gemma3_12b,
+    seamless_m4t_medium,
+    deepseek_v2_236b,
+)
+
+ARCHS: dict[str, ModelConfig] = {
+    m.CONFIG.name: m.CONFIG
+    for m in (
+        command_r_plus_104b,
+        olmoe_1b_7b,
+        mistral_large_123b,
+        qwen2_vl_7b,
+        xlstm_350m,
+        gemma3_27b,
+        recurrentgemma_2b,
+        gemma3_12b,
+        seamless_m4t_medium,
+        deepseek_v2_236b,
+    )
+}
+
+# archs with sub-quadratic / bounded-window sequence mixing that run long_500k
+LONG_CONTEXT_OK = frozenset({
+    "xlstm-350m",
+    "recurrentgemma-2b",
+    "gemma3-12b",
+    "gemma3-27b",
+})
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def supports_shape(arch: str, shape_name: str) -> bool:
+    """Whether (arch, shape) is a supported dry-run combination."""
+    if shape_name == "long_500k":
+        return arch in LONG_CONTEXT_OK
+    return True

@@ -1,0 +1,35 @@
+"""The paper's primary contribution: PHSFL — model splitting, hierarchical
+multi-timescale aggregation, frozen-head training, and head personalization —
+plus the faithful small-scale simulator, comm accounting, and Theorem-1
+bound calculator."""
+
+from repro.core.split import (SplitSpec, split_spec_for, part_masks,
+                              trainable_mask, count_parts,
+                              GLOBAL_TRAIN, HSFL_TRAIN, PERSONALIZE)
+from repro.core.hierarchy import (edge_aggregate, global_aggregate,
+                                  edge_aggregate_mesh, global_aggregate_mesh,
+                                  sgd_step_index, normalized_weights)
+from repro.core.phsfl import (make_phsfl_round, make_shared_server_step,
+                              build_optimizer, abstract_params,
+                              init_stacked_params, init_shared_server_params,
+                              PHSFLRound, SharedServerStep)
+from repro.core.personalize import (personalize_head_bank, personalized_eval,
+                                    merge_head, extract_head, head_loss)
+from repro.core.fedsim import FedSim, centralized_sgd, split_grad, monolithic_grad
+from repro.core.comm import CommModel, comm_for_cnn, comm_for_lm
+from repro.core.theory import BoundInputs, bound_terms, lr_limit, uniform_weights
+
+__all__ = [
+    "SplitSpec", "split_spec_for", "part_masks", "trainable_mask",
+    "count_parts", "GLOBAL_TRAIN", "HSFL_TRAIN", "PERSONALIZE",
+    "edge_aggregate", "global_aggregate", "edge_aggregate_mesh",
+    "global_aggregate_mesh", "sgd_step_index", "normalized_weights",
+    "make_phsfl_round", "make_shared_server_step", "build_optimizer",
+    "abstract_params", "init_stacked_params", "init_shared_server_params",
+    "PHSFLRound", "SharedServerStep",
+    "personalize_head_bank", "personalized_eval", "merge_head",
+    "extract_head", "head_loss",
+    "FedSim", "centralized_sgd", "split_grad", "monolithic_grad",
+    "CommModel", "comm_for_cnn", "comm_for_lm",
+    "BoundInputs", "bound_terms", "lr_limit", "uniform_weights",
+]

@@ -1,0 +1,100 @@
+"""Communication-overhead accounting (paper Remark 1).
+
+All quantities in BITS.  omega = floating-point mantissa-ish precision
+parameter as in [4]; payload per float = (omega + 1) bits.
+
+  Phi_local  = N_b * { 2[(N * Z_c)(omega+1)] + N * (ceil(log2 |D_u|) + 1) }
+      per local round: N_b minibatches, each shipping o_fp up, o_bp down
+      (the 2x), plus the sampled indices.
+  Phi_off    = Z_0 * (omega + 1)
+      client-side model offload (one direction).
+  Phi_PHSFL <= kappa0 * Phi_local + 2 * Phi_off       (Eq. 17)
+  Phi_HFL    = 2 * Z * (omega + 1)
+      classic HFL ships the whole model down + up.
+
+PHSFL wins iff Phi_HFL > Phi_PHSFL, typically because Z >> Z_0 + Z_c.
+
+The datacenter analogue (measured, not modeled) is the collective-bytes
+delta between the paper-faithful round (full-model all-reduce over 'data')
+and the shared-server round (client-block-only all-reduce): see
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class CommModel:
+    omega: int = 32              # bits per float payload (omega+1 with sign)
+    batch_size: int = 32         # N
+    batches_per_epoch: int = 5   # minibatches per local epoch
+    cut_size: int = 0            # Z_c: cut-layer activation elements per sample
+    client_params: int = 0       # Z_0
+    total_params: int = 0        # Z
+    dataset_size: int = 1        # |D_u,ft|
+
+    def phi_activation_bits(self) -> int:
+        """One direction of one minibatch's cut-layer tensor."""
+        return self.batch_size * self.cut_size * (self.omega + 1)
+
+    def phi_indices_bits(self) -> int:
+        return self.batch_size * (math.ceil(math.log2(max(self.dataset_size, 2))) + 1)
+
+    def phi_local_bits(self) -> int:
+        per_batch = 2 * self.phi_activation_bits() + self.phi_indices_bits()
+        return self.batches_per_epoch * per_batch
+
+    def phi_off_bits(self) -> int:
+        return self.client_params * (self.omega + 1)
+
+    def phi_phsfl_bits(self, kappa0: int) -> int:
+        """Eq. (17) upper bound for one edge aggregation round."""
+        return kappa0 * self.phi_local_bits() + 2 * self.phi_off_bits()
+
+    def phi_hfl_bits(self) -> int:
+        return 2 * self.total_params * (self.omega + 1)
+
+    def phsfl_wins(self, kappa0: int) -> bool:
+        return self.phi_hfl_bits() > self.phi_phsfl_bits(kappa0)
+
+
+def comm_for_cnn(cfg, dataset_size: int, *, omega: int = 32,
+                 batch_size: int = 32, batches_per_epoch: int = 5) -> CommModel:
+    """Instantiate the comm model from the paper's CNN split."""
+    import jax
+    import numpy as np
+
+    from repro.core.split import count_parts, split_spec_for
+    from repro.models import cnn as cnn_mod
+
+    params = jax.eval_shape(
+        lambda k: cnn_mod.init(k, cfg), jax.random.PRNGKey(0))
+    counts = count_parts(params, split_spec_for(cfg))
+    z_c = cnn_mod.cut_activation_size(cfg, 1)
+    return CommModel(omega=omega, batch_size=batch_size,
+                     batches_per_epoch=batches_per_epoch, cut_size=z_c,
+                     client_params=counts["client"],
+                     total_params=sum(counts.values()),
+                     dataset_size=dataset_size)
+
+
+def comm_for_lm(cfg, seq_len: int, dataset_size: int, *, omega: int = 16,
+                batch_size: int = 8, batches_per_epoch: int = 1) -> CommModel:
+    """Comm model for an LM architecture (cut after n_client_layers)."""
+    import jax
+
+    from repro.core.split import count_parts, split_spec_for
+    from repro.models import build_model
+
+    model = build_model(cfg)
+    params = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    counts = count_parts(params, split_spec_for(cfg))
+    z_c = seq_len * cfg.d_model            # cut activations per sample
+    return CommModel(omega=omega, batch_size=batch_size,
+                     batches_per_epoch=batches_per_epoch, cut_size=z_c,
+                     client_params=counts["client"],
+                     total_params=sum(counts.values()),
+                     dataset_size=dataset_size)

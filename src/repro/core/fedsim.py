@@ -1,0 +1,283 @@
+"""Faithful PHSFL simulation (paper Secs. III–V) on the paper's CNN.
+
+This module reproduces the paper's algorithm *exactly* as specified:
+
+- B edge servers, U_b clients each, Dirichlet(alpha) non-IID data;
+- split learning dataflow: the client computes the cut-layer activations
+  o_fp (Step 3.2) and offloads them + minibatch indices (Step 3.4); the ES
+  completes the forward with its labels (Step 3.5), backprops the server
+  part (3.6), returns the cut-layer gradient o_bp (3.7), and the client
+  finishes backprop by VJP (3.8).  ``split_grad`` implements this literal
+  dataflow (and a test asserts it equals monolithic backprop — Remark 2);
+- PHSFL: the head (fc2) is frozen during global training (Eq. 12);
+  HSFL baseline: identical but the head trains;
+- hierarchical aggregation: weighted edge aggregation every kappa0 local
+  epochs (Eqs. 14-15), weighted global aggregation every kappa1 edge rounds
+  (Eq. 16);
+- personalization: K head-only SGD steps per client (Eq. 18).
+
+Clients are vmapped (stacked parameter replicas) for speed; the math is the
+per-client loop of the paper.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HierarchyConfig, TrainConfig
+from repro.configs.phsfl_cnn import CNNConfig
+from repro.data.synthetic import FederatedImageData
+from repro.models import cnn
+
+
+# ---------------------------------------------------------------------------
+def split_grad(params, x, y):
+    """Literal split-learning gradient exchange (Steps 3.2–3.8)."""
+    client_p = {"conv1": params["conv1"]}
+    server_p = {"conv2": params["conv2"], "fc1": params["fc1"],
+                "fc2": params["fc2"]}
+
+    # Step 3.2: client forward to the cut layer
+    o_fp, client_vjp = jax.vjp(lambda cp: cnn.client_forward(cp, x), client_p)
+
+    # Steps 3.5–3.6: server forward + server-side backprop
+    def server_loss(sp, o):
+        logits = cnn.server_forward(sp, o)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+
+    loss, (g_server, o_bp) = jax.value_and_grad(
+        server_loss, argnums=(0, 1))(server_p, o_fp)
+
+    # Steps 3.7–3.8: cut-layer gradient back to the client; client VJP
+    (g_client,) = client_vjp(o_bp)
+    return loss, {**g_client, **g_server}
+
+
+def monolithic_grad(params, x, y):
+    """Reference: ordinary end-to-end backprop (for the Remark-2 test)."""
+    return jax.value_and_grad(cnn.loss_fn)(params, x, y)
+
+
+# ---------------------------------------------------------------------------
+@dataclass
+class FedSimResult:
+    history: list = field(default_factory=list)          # per-round metrics
+    global_params: dict | None = None
+    personalized_heads: dict | None = None               # stacked (U, ...)
+    per_client_global: dict | None = None                # eval of w*
+    per_client_personalized: dict | None = None          # eval of w_u^K
+
+
+class FedSim:
+    """Runs PHSFL (freeze_head=True) or HSFL (False) on federated data."""
+
+    def __init__(self, cfg: CNNConfig, data: FederatedImageData,
+                 hcfg: HierarchyConfig, tcfg: TrainConfig, *,
+                 batches_per_epoch: int = 5, seed: int = 0):
+        assert data.num_clients == hcfg.num_clients
+        self.cfg, self.data, self.h, self.t = cfg, data, hcfg, tcfg
+        self.batches_per_epoch = batches_per_epoch
+        self.rng = np.random.default_rng(seed)
+        self.key = jax.random.PRNGKey(seed)
+
+        U, B = hcfg.num_clients, hcfg.num_edge_servers
+        self.U, self.B, self.Ub = U, B, hcfg.clients_per_es
+        # aggregation weights (paper Eq. 4/6): proportional to |D_u|
+        sizes = np.array([len(i) for i in data.train_indices], np.float64)
+        if hcfg.weighting == "uniform":
+            sizes = np.ones_like(sizes)
+        es_sizes = sizes.reshape(B, self.Ub).sum(axis=1)
+        self.alpha_u = (sizes.reshape(B, self.Ub)
+                        / es_sizes[:, None]).reshape(U)      # within-ES
+        self.alpha_b = es_sizes / es_sizes.sum()
+
+        self._build_steps()
+
+    # ------------------------------------------------------------- setup --
+    def _build_steps(self):
+        tcfg = self.t
+        freeze = tcfg.freeze_head
+
+        def sgd_update(params, x, y):
+            loss, g = split_grad(params, x, y)
+            lr = tcfg.learning_rate
+
+            def upd(path_is_head, p, gg):
+                if path_is_head and freeze:
+                    return p                                  # Eq. (12)
+                return p - lr * gg
+
+            new = {k: jax.tree.map(partial(upd, k in cnn.HEAD_KEYS),
+                                   params[k], g[k]) for k in params}
+            return new, loss
+
+        self._client_step = jax.jit(jax.vmap(sgd_update))
+
+        def head_ft_step(params, x, y):
+            """Eq. (18): head-only fine-tuning step."""
+            def loss_head(head):
+                p = {**params, "fc2": head}
+                return cnn.loss_fn(p, x, y)
+
+            loss, g = jax.value_and_grad(loss_head)(params["fc2"])
+            head = jax.tree.map(lambda p, gg: p - tcfg.finetune_lr * gg,
+                                params["fc2"], g)
+            return {**params, "fc2": head}, loss
+
+        self._head_ft_step = jax.jit(jax.vmap(head_ft_step))
+
+        self._eval = jax.jit(jax.vmap(cnn.loss_and_acc))
+
+    # -------------------------------------------------------------- data --
+    def _sample_minibatches(self, batch_size: int):
+        """One (U, N, ...) stacked minibatch (client-local sampling)."""
+        xs, ys = [], []
+        for u in range(self.U):
+            x, y = self.data.client_train(u)
+            idx = self.rng.choice(len(x), size=batch_size,
+                                  replace=len(x) < batch_size)
+            xs.append(x[idx])
+            ys.append(y[idx])
+        return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
+
+    def _stacked_test(self, cap: int = 256):
+        xs, ys, ws = [], [], []
+        for u in range(self.U):
+            x, y = self.data.client_test(u)
+            n = min(len(x), cap)
+            pad = cap - n
+            xs.append(np.pad(x[:n], ((0, pad),) + ((0, 0),) * 3))
+            yy = np.zeros(cap, np.int32)
+            yy[:n] = y[:n]
+            ys.append(yy)
+            w = np.zeros(cap, np.float32)
+            w[:n] = 1.0
+            ws.append(w)
+        return (jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)),
+                jnp.asarray(np.stack(ws)))
+
+    # ------------------------------------------------------- aggregation --
+    def _edge_aggregate(self, stacked):
+        """Eqs. (14)-(15): per-ES weighted average, broadcast back."""
+        B, Ub = self.B, self.Ub
+        w = jnp.asarray(self.alpha_u.reshape(B, Ub), jnp.float32)
+
+        def agg(x):
+            xr = x.reshape((B, Ub) + x.shape[1:])
+            wexp = w.reshape((B, Ub) + (1,) * (x.ndim - 1))
+            m = (xr * wexp).sum(axis=1, keepdims=True)
+            return jnp.broadcast_to(m, xr.shape).reshape(x.shape)
+
+        return jax.tree.map(agg, stacked)
+
+    def _global_aggregate(self, stacked):
+        """Eq. (16): CS-level weighted average over ESs, broadcast back."""
+        B, Ub = self.B, self.Ub
+        wu = jnp.asarray(self.alpha_u.reshape(B, Ub), jnp.float32)
+        wb = jnp.asarray(self.alpha_b, jnp.float32)
+
+        def agg(x):
+            xr = x.reshape((B, Ub) + x.shape[1:])
+            wexp = wu.reshape((B, Ub) + (1,) * (x.ndim - 1))
+            es = (xr * wexp).sum(axis=1)                     # (B, ...)
+            g = (es * wb.reshape((B,) + (1,) * (es.ndim - 1))).sum(axis=0)
+            return jnp.broadcast_to(g[None], x.shape)
+
+        return jax.tree.map(agg, stacked)
+
+    # --------------------------------------------------------------- run --
+    def run(self, rounds: int | None = None, log_every: int = 5) -> FedSimResult:
+        h, t = self.h, self.t
+        rounds = rounds if rounds is not None else h.global_rounds
+        params0 = cnn.init(self.key, self.cfg)
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (self.U,) + x.shape), params0)
+        res = FedSimResult()
+        xt, yt, wt = self._stacked_test()
+
+        for t2 in range(rounds):
+            round_losses = []
+            for t1 in range(h.kappa1):                       # edge rounds
+                for _ in range(h.kappa0):                    # local epochs
+                    for _ in range(self.batches_per_epoch):  # minibatches
+                        x, y = self._sample_minibatches(t.batch_size)
+                        stacked, loss = self._client_step(stacked, x, y)
+                        round_losses.append(float(loss.mean()))
+                stacked = self._edge_aggregate(stacked)      # Eq. 14-15
+            stacked = self._global_aggregate(stacked)        # Eq. 16
+
+            if (t2 + 1) % log_every == 0 or t2 == rounds - 1:
+                gl, ga = self._weighted_eval(stacked, xt, yt, wt)
+                res.history.append({"round": t2 + 1,
+                                    "train_loss": float(np.mean(round_losses)),
+                                    "test_loss": gl, "test_acc": ga})
+        res.global_params = jax.tree.map(lambda x: x[0], stacked)
+        res.per_client_global = self._per_client_eval(stacked, xt, yt, wt)
+        return res
+
+    def _weighted_eval(self, stacked, xt, yt, wt):
+        per = self._per_client_eval(stacked, xt, yt, wt)
+        return float(np.mean(per["loss"])), float(np.mean(per["acc"]))
+
+    def _per_client_eval(self, stacked, xt, yt, wt):
+        """Per-client masked accuracy/loss of the stacked models."""
+        def one(params, x, y, w):
+            logits = cnn.apply(params, x)
+            logp = jax.nn.log_softmax(logits)
+            nll = -jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+            acc = (logits.argmax(-1) == y).astype(jnp.float32)
+            denom = jnp.maximum(w.sum(), 1.0)
+            return (nll * w).sum() / denom, (acc * w).sum() / denom
+
+        loss, acc = jax.jit(jax.vmap(one))(stacked, xt, yt, wt)
+        return {"loss": np.asarray(loss), "acc": np.asarray(acc)}
+
+    # ----------------------------------------------------- personalize ----
+    def personalize(self, global_params, steps: int | None = None):
+        """Eq. (18): per-client head-only fine-tuning of w*."""
+        steps = steps or self.t.finetune_steps
+        stacked = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (self.U,) + x.shape),
+            global_params)
+        for _ in range(steps):
+            x, y = self._sample_minibatches(self.t.batch_size)
+            stacked, _ = self._head_ft_step(stacked, x, y)
+        xt, yt, wt = self._stacked_test()
+        per = self._per_client_eval(stacked, xt, yt, wt)
+        heads = jax.tree.map(lambda x: x, stacked["fc2"])
+        return heads, per
+
+
+# ---------------------------------------------------------------------------
+def centralized_sgd(cfg: CNNConfig, data: FederatedImageData,
+                    tcfg: TrainConfig, epochs: int, seed: int = 0):
+    """The paper's Genie baseline: SGD over the pooled dataset."""
+    from repro.data.loader import batch_iterator
+
+    ds = data.dataset
+    params = cnn.init(jax.random.PRNGKey(seed), cfg)
+
+    @jax.jit
+    def step(params, x, y):
+        loss, g = jax.value_and_grad(cnn.loss_fn)(params, x, y)
+        return jax.tree.map(lambda p, gg: p - tcfg.learning_rate * gg,
+                            params, g), loss
+
+    it = batch_iterator(ds.x_train, ds.y_train, tcfg.batch_size,
+                        seed=seed, epochs=epochs)
+    for x, y in it:
+        params, _ = step(params, jnp.asarray(x), jnp.asarray(y))
+
+    logits = cnn.apply(params, jnp.asarray(ds.x_test))
+    acc = float((np.asarray(logits.argmax(-1)) == ds.y_test).mean())
+    logp = jax.nn.log_softmax(logits)
+    loss = float(-np.take_along_axis(np.asarray(logp), ds.y_test[:, None],
+                                     axis=1).mean())
+    return params, {"acc": acc, "loss": loss}

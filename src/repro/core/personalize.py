@@ -1,0 +1,119 @@
+"""Personalization by head fine-tuning (paper Sec. III-B, Eq. 18).
+
+After global training produces w*, each client fine-tunes ONLY the
+classifier/head for K SGD steps on its local data; the client block and body
+stay exactly w*.  The personalized model is
+w_u^K = [w*_{b,0}; [w*_{b,1,bd}; w_{u,1,hd}^K]].
+
+Two implementations:
+  - ``personalize_head_bank``: framework-scale.  Since the body is frozen,
+    the final hidden states are computed ONCE per client and the K SGD steps
+    run on the cached hiddens (beyond-paper speedup; identical math when the
+    fine-tuning minibatch set is fixed).
+  - fedsim's faithful per-step recompute lives in core/fedsim.py.
+
+Serving: ``merge_head`` grafts a personalized head onto the shared trunk —
+this is what launch/serve.py uses to serve per-client personalized models.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.split import split_spec_for, part_masks
+from repro.models import transformer as tf_mod
+from repro.models.registry import Model
+
+
+def extract_head(params, cfg) -> dict:
+    """The head subtree (paths preserved), e.g. {"lm_head": {"w": ...}}."""
+    from repro.utils.tree import map_with_path, path_str
+    spec = split_spec_for(cfg)
+    flat, _ = jax.tree_util.tree_flatten_with_path(params)
+    out: dict = {}
+    for path, leaf in flat:
+        p = path_str(path)
+        if spec.part_of(p) == "head":
+            cur = out
+            keys = p.split("/")
+            for k in keys[:-1]:
+                cur = cur.setdefault(k, {})
+            cur[keys[-1]] = leaf
+    return out
+
+
+def merge_head(params, head_params, cfg):
+    """Graft a (per-client) head onto shared trunk params.
+
+    ``head_params`` may be a partial tree containing only the head paths
+    (as produced by extract_head) or a full params-shaped tree.
+    """
+    from repro.utils.tree import map_with_path, path_str
+    spec = split_spec_for(cfg)
+
+    def lookup(tree, path: str):
+        cur = tree
+        for k in path.split("/"):
+            if not isinstance(cur, dict) or k not in cur:
+                return None
+            cur = cur[k]
+        return cur
+
+    def pick(path, leaf):
+        if spec.part_of(path) != "head":
+            return leaf
+        h = lookup(head_params, path)
+        assert h is not None, f"head leaf {path} missing from head_params"
+        return h
+
+    return map_with_path(pick, params)
+
+
+def head_loss(head_w, cfg: ModelConfig, hidden, labels):
+    """Cross-entropy using an explicit head weight (B,S,D)x(D,V)."""
+    fake_params = {"lm_head": {"w": head_w}}
+    return tf_mod.lm_loss(fake_params, cfg, hidden, labels)
+
+
+def personalize_head_bank(model: Model, params, batches, tcfg: TrainConfig):
+    """Fine-tune one head per client from cached hidden states.
+
+    batches: dict of arrays with leading client dim C — {"tokens": (C,B,S),
+    "labels": (C,B,S), ...}.  Returns head bank (C, D, V) and per-client
+    losses (C, K).
+    """
+    cfg = model.cfg
+
+    def per_client(batch_c):
+        hidden, _ = model.apply(params, batch_c)           # body forward ONCE
+        w0 = params["lm_head"]["w"]
+
+        def step(w, _):
+            loss, g = jax.value_and_grad(head_loss)(w, cfg, hidden,
+                                                    batch_c["labels"])
+            return w - tcfg.finetune_lr * g.astype(w.dtype), loss
+
+        w, losses = jax.lax.scan(step, w0, None, length=tcfg.finetune_steps)
+        return w, losses
+
+    if cfg.moe is not None:
+        # ragged_dot (MoE grouped matmul) cannot be vmapped yet — map
+        # clients sequentially (identical math).
+        return jax.lax.map(per_client, batches)
+    return jax.vmap(per_client)(batches)
+
+
+def personalized_eval(model: Model, params, head_bank, batches):
+    """Per-client loss of the personalized models on held-out batches."""
+    cfg = model.cfg
+
+    def per_client(w_head, batch_c):
+        hidden, _ = model.apply(params, batch_c)
+        return head_loss(w_head, cfg, hidden, batch_c["labels"])
+
+    if cfg.moe is not None:
+        return jax.lax.map(lambda args: per_client(*args),
+                           (head_bank, batches))
+    return jax.vmap(per_client)(head_bank, batches)

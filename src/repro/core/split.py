@@ -1,0 +1,105 @@
+"""Model splitting (the SL part of PHSFL, paper Sec. III-A Steps 2.1–2.2).
+
+The model parameter pytree is partitioned into three parts:
+
+    client  w_{b,0}    — embedding + first n_client_layers blocks (trained on
+                         the client device)
+    body    w_{b,1,bd} — remaining blocks + final norm (trained on the ES)
+    head    w_{b,1,hd} — the output classifier (randomly initialized and
+                         FROZEN during global training, Eq. 12; fine-tuned
+                         per client for personalization, Eq. 18)
+
+On TPU the split is a parameter partition + masking (the lowered graph is
+identical — this is exactly the paper's Remark 2: the cut-layer choice does
+not change learning dynamics).  The faithful activation-exchange dataflow is
+exercised by core/fedsim.py on the paper's CNN.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import jax
+
+from repro.configs.base import ModelConfig
+from repro.configs.phsfl_cnn import CNNConfig
+from repro.utils.tree import map_with_path
+
+# training phases
+GLOBAL_TRAIN = "global_train"      # PHSFL: everything but the head trains
+HSFL_TRAIN = "hsfl_train"          # baseline: everything trains
+PERSONALIZE = "personalize"        # only the head trains (Eq. 18)
+
+
+@dataclass(frozen=True)
+class SplitSpec:
+    client_patterns: tuple[str, ...]
+    head_patterns: tuple[str, ...]
+
+    def part_of(self, path: str) -> str:
+        if any(re.search(p, path) for p in self.head_patterns):
+            return "head"
+        if any(re.search(p, path) for p in self.client_patterns):
+            return "client"
+        return "body"
+
+
+def split_spec_for(cfg) -> SplitSpec:
+    """Build the SplitSpec for a model config."""
+    if isinstance(cfg, CNNConfig):
+        from repro.models import cnn
+        return SplitSpec(
+            client_patterns=tuple(f"^{k}(/|$)" for k in cnn.CLIENT_KEYS),
+            head_patterns=tuple(f"^{k}(/|$)" for k in cnn.HEAD_KEYS),
+        )
+    assert isinstance(cfg, ModelConfig)
+    if cfg.encdec is not None:
+        # client side = the modality frontend projection + token embedding
+        return SplitSpec(
+            client_patterns=(r"^src_proj(/|$)", r"^embed(/|$)"),
+            head_patterns=(rf"^{cfg.head_name}(/|$)",),
+        )
+    # decoder LMs: compute_stages guarantees the first n_client_layers are
+    # unscanned blocks of stage0 ("lead"); they plus the embedding form w_0.
+    from repro.models.transformer import compute_stages
+    stages = compute_stages(cfg)
+    client: list[str] = [r"^embed(/|$)"]
+    if cfg.n_client_layers and stages and stages[0].which == "lead":
+        for j, lid in enumerate(stages[0].layer_ids):
+            if lid < cfg.n_client_layers:
+                client.append(rf"^stage0/b{j}(/|$)")
+    return SplitSpec(client_patterns=tuple(client),
+                     head_patterns=(rf"^{cfg.head_name}(/|$)",))
+
+
+def part_masks(params, spec: SplitSpec):
+    """Boolean mask trees for each part; exactly one True per leaf."""
+    def mk(part):
+        return map_with_path(lambda path, _: spec.part_of(path) == part, params)
+
+    return {"client": mk("client"), "body": mk("body"), "head": mk("head")}
+
+
+def trainable_mask(params, spec: SplitSpec, phase: str):
+    """What trains in each phase (True = trainable)."""
+    if phase == GLOBAL_TRAIN:
+        return map_with_path(lambda p, _: spec.part_of(p) != "head", params)
+    if phase == HSFL_TRAIN:
+        return jax.tree.map(lambda _: True, params)
+    if phase == PERSONALIZE:
+        return map_with_path(lambda p, _: spec.part_of(p) == "head", params)
+    raise ValueError(phase)
+
+
+def count_parts(params, spec: SplitSpec):
+    """Parameter counts per part (Z_0, Z_bd, Z_hd of the paper)."""
+    import numpy as np
+    counts = {"client": 0, "body": 0, "head": 0}
+
+    def visit(path, leaf):
+        counts[spec.part_of(path)] += int(np.prod(leaf.shape))
+        return leaf
+
+    map_with_path(visit, params)
+    return counts

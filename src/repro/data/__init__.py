@@ -1,0 +1,16 @@
+from repro.data.dirichlet import dirichlet_partition
+from repro.data.synthetic import (
+    SyntheticImageDataset,
+    make_federated_image_data,
+    synthetic_token_batch,
+)
+from repro.data.loader import ClientLoader, batch_iterator
+
+__all__ = [
+    "dirichlet_partition",
+    "SyntheticImageDataset",
+    "make_federated_image_data",
+    "synthetic_token_batch",
+    "ClientLoader",
+    "batch_iterator",
+]

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash attention kernel."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                  softcap: float = 0.0):
+    """q: (B,H,S,d); k,v: (B,KVH,S,d).  Dense masked softmax reference."""
+    b, h, s, d = q.shape
+    kvh = k.shape[1]
+    g = h // kvh
+    kx = jnp.repeat(k, g, axis=1)
+    vx = jnp.repeat(v, g, axis=1)
+    scale = 1.0 / math.sqrt(d)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                        kx.astype(jnp.float32))
+    if softcap:
+        logits = jnp.tanh(logits / softcap) * softcap
+    pos = jnp.arange(s)
+    keep = jnp.ones((s, s), bool)
+    if causal:
+        keep &= pos[None, :] <= pos[:, None]
+    if window:
+        keep &= pos[None, :] > pos[:, None] - window
+    logits = jnp.where(keep, logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, vx.astype(jnp.float32))
+    return out.astype(q.dtype)

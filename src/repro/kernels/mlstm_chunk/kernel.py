@@ -1,0 +1,109 @@
+"""Chunkwise-parallel mLSTM Pallas TPU kernel (xLSTM, arXiv:2405.04517).
+
+One program instance processes one (batch, head) pair; the chunk dim is the
+innermost grid axis and the inter-chunk carry (C: dk x dv matrix memory,
+n: dk normalizer, m: stabilizer) lives in VMEM scratch.  Within a chunk the
+math is the quadratic stabilized form on a (bt x bt) tile — MXU-friendly —
+while cross-chunk state keeps total work linear in sequence length.
+
+Matches repro.models.xlstm.mlstm_chunkwise (the jnp implementation used by
+the model) and the recurrent decode step (tested).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_CHUNK = 128
+NEG_BIG = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, li_ref, lf_ref, o_ref,
+                  c_ref, n_ref, m_ref, *, chunk: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+        n_ref[...] = jnp.zeros_like(n_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_BIG)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bt, dh)
+    k = k_ref[0, 0].astype(jnp.float32)
+    v = v_ref[0, 0].astype(jnp.float32)
+    li = li_ref[0, 0].astype(jnp.float32)        # (bt,)
+    lf = lf_ref[0, 0].astype(jnp.float32)
+
+    m_prev = m_ref[0]
+    a = jnp.cumsum(lf)                           # (bt,)
+    g = li - a
+    run_max = jax.lax.cummax(g, axis=0)
+    M = jnp.maximum(m_prev, run_max)             # (bt,)
+    m_t = a + M
+
+    # intra-chunk decay matrix D[t,s] = exp(g_s - M_t), s <= t
+    t_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    s_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    D = jnp.where(t_idx >= s_idx, jnp.exp(g[None, :] - M[:, None]), 0.0)
+
+    scores = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * D  # (bt,bt)
+    h_intra = jax.lax.dot_general(scores, v, (((1,), (0,)), ((), ())))
+    n_intra = jax.lax.dot_general(D, k, (((1,), (0,)), ((), ())))     # (bt,dh)
+
+    decay = jnp.exp(m_prev - M)                  # (bt,)
+    h_inter = jax.lax.dot_general(q, c_ref[...], (((1,), (0,)), ((), ()))) \
+        * decay[:, None]
+    n_tot = n_intra + n_ref[...][None, :] * decay[:, None]
+    denom = jnp.maximum(jnp.abs(jnp.sum(q * n_tot, axis=1)), jnp.exp(-m_t))
+    o_ref[0, 0] = ((h_intra + h_inter) / denom[:, None]).astype(o_ref.dtype)
+
+    # ---- carry update ----
+    M_L = M[chunk - 1]
+    m_new = m_t[chunk - 1]
+    w_s = jnp.exp(g - M_L)                       # (bt,)
+    c_ref[...] = c_ref[...] * jnp.exp(m_prev - M_L) + \
+        jax.lax.dot_general(k * w_s[:, None], v, (((0,), (0,)), ((), ())))
+    n_ref[...] = n_ref[...] * jnp.exp(m_prev - M_L) + \
+        jnp.sum(k * w_s[:, None], axis=0)
+    m_ref[0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk_pallas(q, k, v, li, lf, *, chunk: int = DEFAULT_CHUNK,
+                       interpret: bool = True):
+    """q,k,v: (B,H,S,dh); li,lf: (B,H,S) log input/forget gates.
+
+    Returns h: (B,H,S,dh).
+    """
+    b, h, s, dh = q.shape
+    chunk = min(chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    kernel = functools.partial(_mlstm_kernel, chunk=chunk)
+    blk4 = lambda b_, h_, ci: (b_, h_, ci, 0)
+    blk3 = lambda b_, h_, ci: (b_, h_, ci)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, dh), blk4),
+            pl.BlockSpec((1, 1, chunk, dh), blk4),
+            pl.BlockSpec((1, 1, chunk, dh), blk4),
+            pl.BlockSpec((1, 1, chunk), blk3),
+            pl.BlockSpec((1, 1, chunk), blk3),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, dh), blk4),
+        out_shape=jax.ShapeDtypeStruct((b, h, s, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((dh, dh), jnp.float32),
+            pltpu.VMEM((dh,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, li, lf)

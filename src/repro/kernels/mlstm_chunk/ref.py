@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the mLSTM chunk kernel: the model's own chunkwise
+implementation re-laid-out to head-major, plus a fully-recurrent oracle."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.xlstm import mlstm_chunkwise, mlstm_step
+
+
+def mlstm_ref(q, k, v, li, lf, chunk: int = 128):
+    """q,k,v: (B,H,S,dh); li,lf: (B,H,S) -> h (B,H,S,dh)."""
+    qs = jnp.swapaxes(q, 1, 2)  # (B,S,H,dh)
+    ks = jnp.swapaxes(k, 1, 2)
+    vs = jnp.swapaxes(v, 1, 2)
+    lis = jnp.swapaxes(li, 1, 2)
+    lfs = jnp.swapaxes(lf, 1, 2)
+    h, _ = mlstm_chunkwise(qs, ks, vs, lis, lfs, chunk=chunk)
+    return jnp.swapaxes(h, 1, 2)
+
+
+def mlstm_recurrent_ref(q, k, v, li, lf):
+    """Step-by-step recurrent oracle (ground truth for both forms)."""
+    b, h, s, dh = q.shape
+    carry = (jnp.zeros((b, h, dh, dh), jnp.float32),
+             jnp.zeros((b, h, dh), jnp.float32),
+             jnp.full((b, h), -1e30, jnp.float32))
+    outs = []
+    for t in range(s):
+        ht, carry = mlstm_step(q[:, :, t][:, None].swapaxes(1, 1).reshape(b, 1, h, dh),
+                               k[:, :, t].reshape(b, 1, h, dh),
+                               v[:, :, t].reshape(b, 1, h, dh),
+                               li[:, :, t].reshape(b, 1, h),
+                               lf[:, :, t].reshape(b, 1, h), carry)
+        outs.append(ht[:, 0])
+    return jnp.stack(outs, axis=2)  # (B,H,S,dh)

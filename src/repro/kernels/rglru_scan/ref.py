@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for the RG-LRU scan kernel (sequential-scan form)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rglru_scan_ref(log_a, b, h0):
+    """h_t = exp(log_a_t) * h_{t-1} + b_t.  log_a,b: (B,S,W); h0: (B,W)."""
+    def step(h, inp):
+        la, bb = inp
+        h = jnp.exp(la) * h + bb
+        return h, h
+
+    la = jnp.moveaxis(log_a.astype(jnp.float32), 1, 0)
+    bb = jnp.moveaxis(b.astype(jnp.float32), 1, 0)
+    _, hs = jax.lax.scan(step, h0.astype(jnp.float32), (la, bb))
+    return jnp.moveaxis(hs, 0, 1).astype(log_a.dtype)

@@ -1,0 +1,158 @@
+"""Abstract input construction (ShapeDtypeStruct + NamedSharding) for every
+(architecture x input-shape x mesh) dry-run combination.  No allocation.
+
+Batch layout per step kind:
+
+  train   (PHSFL round)   {"tokens","labels"}: (C, k_local, micro, seq)
+                          C = pods*clients_per_pod client replicas,
+                          k_local local SGD steps fused per round call,
+                          micro = global_batch / C / k_local.
+  prefill                 {"tokens","labels"}: (B, S) — batch over data axes.
+  decode                  token (B,1) + per-layer KV/state cache.
+
+Modality stubs ([vlm]/[audio]): patch/frame embeddings appear here as
+precomputed inputs — exactly the allowed frontend carve-out.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.launch.mesh import num_clients
+from repro.models.registry import Model
+from repro.sharding.rules import data_axes
+
+
+def _dab(mesh: Mesh):
+    ca = data_axes(mesh)
+    return ca if len(ca) > 1 else ca[0]
+
+
+def _dab_size(mesh: Mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def _sds(shape, dtype, mesh, spec):
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _extras_specs(cfg: ModelConfig, lead_shape: tuple[int, ...], seq: int,
+                  mesh: Mesh, lead_spec):
+    """Modality-stub inputs with the given leading batch dims/spec."""
+    extras = {}
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.vlm is not None:
+        extras["patch_embeds"] = _sds(
+            lead_shape + (cfg.vlm.num_patch_tokens, cfg.d_model), dt, mesh,
+            P(lead_spec))
+        extras["positions3"] = _sds(lead_shape + (seq, 3), jnp.int32, mesh,
+                                    P(lead_spec))
+    if cfg.encdec is not None:
+        extras["source_embeds"] = _sds(
+            lead_shape + (cfg.encdec.max_source_len, cfg.d_model), dt, mesh,
+            P(lead_spec))
+    return extras
+
+
+# ------------------------------------------------------------- train -------
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                      tcfg: TrainConfig):
+    """Per-client-stacked batch for the paper-faithful PHSFL round."""
+    C = num_clients(mesh)
+    k = tcfg.local_steps_in_step
+    micro = shape.global_batch // (C * k)
+    assert micro >= 1, (shape.global_batch, C, k)
+    lead = _dab(mesh)
+    tok = _sds((C, k, micro, shape.seq_len), jnp.int32, mesh, P(lead))
+    batch = {"tokens": tok, "labels": tok}
+    batch.update(_extras_specs(cfg, (C, k, micro), shape.seq_len, mesh, lead))
+    return batch
+
+
+def train_weight_specs(mesh: Mesh):
+    C = num_clients(mesh)
+    lead = _dab(mesh)
+    a = _sds((C,), jnp.float32, mesh, P(lead))
+    return a, a
+
+
+# ----------------------------------------------------- prefill / decode ----
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    ds = _dab_size(mesh)
+    lead = _dab(mesh) if shape.global_batch % ds == 0 else None
+    tok = _sds((shape.global_batch, shape.seq_len), jnp.int32, mesh, P(lead))
+    batch = {"tokens": tok, "labels": tok}
+    batch.update(_extras_specs(cfg, (shape.global_batch,), shape.seq_len,
+                               mesh, lead))
+    return batch
+
+
+def decode_token_specs(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh):
+    ds = _dab_size(mesh)
+    lead = _dab(mesh) if shape.global_batch % ds == 0 else None
+    tok = _sds((shape.global_batch, 1), jnp.int32, mesh, P(lead))
+    extras = {}
+    if cfg.vlm is not None:
+        extras["positions3"] = _sds((shape.global_batch, 1, 3), jnp.int32,
+                                    mesh, P(lead))
+    return tok, extras
+
+
+def cache_specs(model: Model, shape: ShapeConfig, mesh: Mesh,
+                dtype=jnp.bfloat16):
+    """Sharded abstract decode cache.
+
+    Rules: shard the batch dim over the data axes when divisible; for
+    global_batch=1 (long_500k) shard the cache *length* dim instead; shard
+    very wide state dims (>=1024) over 'model'.
+    """
+    B = shape.global_batch
+    S = shape.seq_len
+    ds = _dab_size(mesh)
+    dab = _dab(mesh)
+    model_size = mesh.shape["model"]
+    cache_shapes = jax.eval_shape(
+        lambda: model.init_cache(B, S, dtype=dtype))
+
+    # which top-level stages are scanned (leading repeats dim on leaves)?
+    scanned_prefixes = set()
+    if model.cfg.encdec is not None:
+        scanned_prefixes.update({"self", "cross"})
+    else:
+        from repro.models.transformer import compute_stages
+        for si, st in enumerate(compute_stages(model.cfg)):
+            if st.which == "scan":
+                scanned_prefixes.add(f"stage{si}")
+
+    from repro.utils.tree import map_with_path
+
+    def leaf_spec(path, leaf):
+        top = path.split("/")[0]
+        off = 1 if top in scanned_prefixes else 0
+        entries = [None] * leaf.ndim
+        shp = leaf.shape
+        if B > 1 and B % ds == 0 and off < leaf.ndim and shp[off] == B:
+            entries[off] = dab
+        elif B == 1 and leaf.ndim > off + 1 and shp[off + 1] >= ds \
+                and shp[off + 1] % ds == 0:
+            entries[off + 1] = dab          # shard cache length (long_500k)
+        # wide diagonal state dims over model axis
+        if leaf.ndim >= off + 2 and shp[-1] >= 1024 \
+                and shp[-1] % model_size == 0:
+            entries[-1] = "model"
+        # attention kv heads over model axis
+        if leaf.ndim - off == 4 and shp[off + 2] % model_size == 0 \
+                and shp[off + 2] > 1:
+            entries[off + 2] = "model"
+        return _sds(shp, leaf.dtype, mesh, P(*entries))
+
+    return map_with_path(leaf_spec, cache_shapes)

@@ -1,0 +1,219 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs / (chips x 197 TF/s bf16)
+    memory term     = HLO_bytes / (chips x 819 GB/s HBM)
+    collective term = collective_bytes / (chips x 50 GB/s ICI link)
+
+HLO_FLOPs / HLO_bytes come from compiled.cost_analysis().  XLA reports these
+for the *partitioned per-device* module; we therefore treat them as
+per-chip quantities and divide by single-chip peaks (equivalently: global
+quantities over chips x peak).  collective_bytes is not in cost_analysis —
+we parse the optimized HLO text and sum the output-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(output size is the standard per-device wire proxy; ring-algorithm factors
+of 2(n-1)/n are O(1) and noted, not modeled).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[8,128,2048]{2,1,0}  or  (f32[128], f32[128])
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\(?[^=]*?\)?)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", re.M)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind from optimized HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    seen_started = set()
+    for m in _OP_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        # avoid double counting start/done pairs: the -done line usually has
+        # the same output shape; count "-start" once and plain ops once.
+        line = hlo_text[m.start():hlo_text.find("\n", m.start())]
+        if f"{kind}-done" in line:
+            continue
+        b = _shape_bytes(shape_str)
+        out[kind] += b
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = counts
+    return out
+
+
+@dataclass
+class Roofline:
+    """Roofline terms for one (arch, shape, mesh) combination.
+
+    The primary terms (compute_s / memory_s / collective_s) come from the
+    ANALYTIC model (launch/analytic.py) because XLA's HloCostAnalysis counts
+    while-loop bodies once, not x trip count, so compiled cost_analysis()
+    undercounts our scan-heavy steps.  The raw HLO numbers are kept as
+    hlo_* fields: they bound per-iteration cost and verify the collective
+    schedule actually lowered (counts per collective kind).
+    """
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # analytic (per chip)
+    flops: float
+    hbm_bytes: float
+    coll_bytes: float
+    # raw compiled-HLO numbers (per device; loop bodies counted once)
+    hlo_flops: float = 0.0
+    hlo_bytes: float = 0.0
+    hlo_coll_bytes: float = 0.0
+    coll_detail: dict = field(default_factory=dict)
+    analytic_detail: dict = field(default_factory=dict)
+    model_flops: float = 0.0     # 6*N_active*D (global)
+    peak_memory_bytes: float = 0.0
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (global analytic flops): how much of the compute is
+        'useful' (catches remat/redundancy/frontend waste)."""
+        total = self.flops * self.chips
+        return self.model_flops / total if total else 0.0
+
+    def to_dict(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "flops_per_chip": self.flops,
+            "hbm_bytes_per_chip": self.hbm_bytes,
+            "collective_bytes_per_chip": self.coll_bytes,
+            "hlo_flops_per_chip": self.hlo_flops,
+            "hlo_bytes_per_chip": self.hlo_bytes,
+            "hlo_collective_bytes_per_chip": self.hlo_coll_bytes,
+            "collective_detail": self.coll_detail,
+            "analytic_detail": self.analytic_detail,
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "peak_memory_bytes": self.peak_memory_bytes,
+        }
+
+
+def active_params(cfg) -> int:
+    """Parameter count; for MoE, the *active* (top-k) parameter count."""
+    import jax
+
+    from repro.models import build_model
+
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+
+    def leaf_count(path, s):
+        import numpy as np
+        n = int(np.prod(s.shape))
+        if cfg.moe is not None and ("w_gate" in path or "w_up" in path
+                                    or "w_down" in path):
+            n = n * cfg.moe.top_k // cfg.moe.num_experts
+        return n
+
+    from repro.utils.tree import map_with_path
+    counts = []
+    map_with_path(lambda p, s: counts.append(leaf_count(p, s)) or s, shapes)
+    return sum(counts)
+
+
+def model_flops_for(cfg, shape, kind: str) -> float:
+    """6*N*D train / 2*N*D inference, D = tokens processed per step."""
+    n = active_params(cfg)
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze(compiled, lowered_text: str | None, *, arch: str, shape, mesh_name: str,
+            chips: int, kind: str, cfg, mesh_shape: dict | None = None,
+            mode: str = "paper_faithful", attn_impl: str = "masked",
+            param_mode: str = "fsdp_tp", agg_dtype_bytes: int = 4,
+            tcfg=None) -> Roofline:
+    from repro.launch.analytic import cost_for
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):      # older API returned [dict]
+        cost = cost[0] if cost else {}
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    text = compiled.as_text() if lowered_text is None else lowered_text
+    coll = collective_bytes(text)
+    peak = 0.0
+    try:
+        ma = compiled.memory_analysis()
+        peak = float(getattr(ma, "temp_size_in_bytes", 0) or 0) + \
+            float(getattr(ma, "argument_size_in_bytes", 0) or 0) + \
+            float(getattr(ma, "output_size_in_bytes", 0) or 0)
+    except Exception:
+        pass
+    ac = cost_for(cfg, shape, mesh_shape or {}, mode=mode,
+                  attn_impl=attn_impl, param_mode=param_mode,
+                  agg_dtype_bytes=agg_dtype_bytes, tcfg=tcfg)
+    return Roofline(arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+                    flops=ac.flops, hbm_bytes=ac.hbm_bytes,
+                    coll_bytes=ac.coll_bytes,
+                    hlo_flops=hlo_flops, hlo_bytes=hlo_bytes,
+                    hlo_coll_bytes=float(coll["total"]), coll_detail=coll,
+                    analytic_detail=ac.detail,
+                    model_flops=model_flops_for(cfg, shape, kind),
+                    peak_memory_bytes=peak)

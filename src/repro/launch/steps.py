@@ -1,0 +1,179 @@
+"""Step builders: the jittable (train / prefill / decode) step functions with
+their abstract inputs, used by both the dry-run and the CPU-scale drivers."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import HierarchyConfig, ModelConfig, ShapeConfig, TrainConfig
+from repro.core.phsfl import abstract_params, build_optimizer, make_phsfl_round
+from repro.launch import input_specs as ispec
+from repro.launch.mesh import num_clients
+from repro.models.registry import Model, build_model
+from repro.models import transformer as tf_mod
+from repro.sharding.rules import named_sharding, params_specs
+from repro.utils.tree import map_with_path
+
+
+@dataclass
+class StepBundle:
+    """A step function plus abstract (sharded) example arguments."""
+    fn: Callable
+    args: tuple
+    kind: str
+    meta: dict
+
+
+# ----------------------------------------------------------- train ---------
+def build_train_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+                     tcfg: TrainConfig | None = None,
+                     hcfg: HierarchyConfig | None = None) -> StepBundle:
+    """The paper-faithful PHSFL edge round (with global sync on multi-pod)."""
+    tcfg = tcfg or TrainConfig()
+    hcfg = hcfg or HierarchyConfig()
+    model = build_model(cfg)
+    C = num_clients(mesh)
+    multi = "pod" in mesh.axis_names
+
+    round_ = make_phsfl_round(model, hcfg, tcfg, mesh, global_sync=multi)
+    opt, _ = build_optimizer(model, tcfg)
+
+    pshapes = abstract_params(model, stacked_clients=C)
+    pshard = named_sharding(mesh, round_.params_spec)
+    params = jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        pshapes, pshard)
+
+    sshapes = jax.eval_shape(
+        lambda: opt.init(jax.tree.map(
+            lambda s: jnp.zeros(s.shape[1:], s.dtype), pshapes)))
+    lead = ispec._dab(mesh)
+
+    def stack_state(s):
+        return jax.ShapeDtypeStruct((C,) + s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, P(lead)))
+
+    opt_state = jax.tree.map(stack_state, sshapes)
+    batch = ispec.train_batch_specs(cfg, shape, mesh, tcfg)
+    au, ab = ispec.train_weight_specs(mesh)
+    return StepBundle(fn=round_.fn, args=(params, opt_state, batch, au, ab),
+                      kind="train",
+                      meta={"clients": C, "local_steps": tcfg.local_steps_in_step,
+                            "global_sync": multi, "mode": "paper_faithful"})
+
+
+def build_shared_server_train_step(cfg: ModelConfig, shape: ShapeConfig,
+                                   mesh: Mesh,
+                                   tcfg: TrainConfig | None = None,
+                                   hcfg: HierarchyConfig | None = None
+                                   ) -> StepBundle:
+    """Beyond-paper shared-server (SFL-V2) step for the same shapes."""
+    from repro.core.phsfl import make_shared_server_step
+    from repro.core.split import part_masks, split_spec_for
+
+    tcfg = tcfg or TrainConfig(shared_server=True)
+    hcfg = hcfg or HierarchyConfig()
+    model = build_model(cfg)
+    C = num_clients(mesh)
+    step = make_shared_server_step(model, hcfg, tcfg, mesh, C)
+
+    shapes = abstract_params(model)
+    masks = part_masks(shapes, split_spec_for(cfg))
+    pspec = params_specs(shapes, model.axes(), mesh, mode="fsdp_tp")
+    lead = ispec._dab(mesh)
+
+    def stacked(mask_c, s, sp):
+        if mask_c:  # client block: per-client, replicate inner dims
+            return jax.ShapeDtypeStruct(
+                (C,) + s.shape, s.dtype,
+                sharding=NamedSharding(mesh, P(lead)))
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, sp))
+
+    params = jax.tree.map(stacked, masks["client"], shapes, pspec,
+                          is_leaf=lambda x: isinstance(x, bool))
+    opt, _ = build_optimizer(model, tcfg)
+    sshapes = jax.eval_shape(lambda: opt.init(params))
+    opt_state = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), sshapes)
+
+    # batch: (C, micro, seq) — one local step per call in this mode
+    micro = shape.global_batch // C
+    tok = ispec._sds((C, micro, shape.seq_len), jnp.int32, mesh, P(lead))
+    batch = {"tokens": tok, "labels": tok}
+    batch.update(ispec._extras_specs(cfg, (C, micro), shape.seq_len, mesh, lead))
+    return StepBundle(fn=step.fn, args=(params, opt_state, batch),
+                      kind="train",
+                      meta={"clients": C, "mode": "shared_server"})
+
+
+# ------------------------------------------------------ prefill / decode ---
+def build_prefill_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                       param_mode: str = "fsdp_tp") -> StepBundle:
+    model = build_model(cfg)
+    shapes = abstract_params(model)
+    pspec = params_specs(shapes, model.axes(), mesh, mode=param_mode)
+    params = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes, pspec, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    batch = ispec.prefill_batch_specs(cfg, shape, mesh)
+
+    def prefill_fn(params, batch):
+        hidden, _ = model.apply(params, batch, remat=False)
+        # last-position logits (what serving returns after prefill)
+        return tf_mod.logits_from_hidden(params, cfg, hidden[:, -1:, :])
+
+    return StepBundle(fn=prefill_fn, args=(params, batch), kind="prefill",
+                      meta={"mode": "serving"})
+
+
+def build_decode_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+                      param_mode: str = "fsdp_tp") -> StepBundle:
+    model = build_model(cfg)
+    shapes = abstract_params(model)
+    pspec = params_specs(shapes, model.axes(), mesh, mode=param_mode)
+    params = jax.tree.map(
+        lambda s, sp: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, sp)),
+        shapes, pspec, is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    tok, extras = ispec.decode_token_specs(cfg, shape, mesh)
+    cache = ispec.cache_specs(model, shape, mesh)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+
+    if extras:
+        def decode_fn(params, token, cache, index, positions3):
+            return model.decode_step(params, token, cache, index,
+                                     positions3=positions3)
+
+        args = (params, tok, cache, index, extras["positions3"])
+    else:
+        def decode_fn(params, token, cache, index):
+            return model.decode_step(params, token, cache, index)
+
+        args = (params, tok, cache, index)
+    return StepBundle(fn=decode_fn, args=args, kind="decode",
+                      meta={"mode": "serving", "cache_len": shape.seq_len,
+                            "param_mode": param_mode})
+
+
+def build_step(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh, *,
+               train_mode: str = "paper_faithful",
+               serve_param_mode: str = "fsdp_tp",
+               tcfg: TrainConfig | None = None) -> StepBundle:
+    if shape.kind == "train":
+        if train_mode == "shared_server":
+            return build_shared_server_train_step(cfg, shape, mesh, tcfg)
+        return build_train_step(cfg, shape, mesh, tcfg)
+    if shape.kind == "prefill":
+        return build_prefill_step(cfg, shape, mesh,
+                                  param_mode=serve_param_mode)
+    if shape.kind == "decode":
+        return build_decode_step(cfg, shape, mesh,
+                                 param_mode=serve_param_mode)
+    raise ValueError(shape.kind)

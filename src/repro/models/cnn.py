@@ -1,0 +1,110 @@
+"""The paper's CNN (Sec. V-A) with explicit split-learning dataflow.
+
+Client-side model  w_{u,0}:  conv1 -> relu -> maxpool          (trained on client)
+Server-side body   w_{1,bd}: conv2 -> relu -> maxpool -> fc1 -> relu
+Server-side head   w_{1,hd}: fc2  (classifier — random-init, FROZEN in training,
+                                   fine-tuned per client for personalization)
+
+``client_forward`` / ``server_forward`` mirror Steps 3.2–3.5: the client
+computes the cut-layer activations o_fp, offloads them (plus mini-batch
+indices) to the ES, which completes the forward pass with the labels it
+holds.  The comm accounting in core/comm.py uses the o_fp shape here.
+
+Note: the paper writes FC(512,256); with 3x3 same-padding convs and two 2x2
+pools on 32x32 inputs, the flat dim is 8*8*128.  We keep the architecture
+shape-generic via CNNConfig.flat_dim (deviation recorded in DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.phsfl_cnn import CNNConfig
+from repro.models.init_utils import truncated_normal
+
+
+def _conv_init(key, k, cin, cout, dtype=jnp.float32):
+    scale = 1.0 / math.sqrt(k * k * cin)
+    kw, kb = jax.random.split(key)
+    return {"w": truncated_normal(kw, (k, k, cin, cout), scale, dtype),
+            "b": jnp.zeros((cout,), dtype)}
+
+
+def _fc_init(key, din, dout, dtype=jnp.float32):
+    return {"w": truncated_normal(key, (din, dout), 1.0 / math.sqrt(din), dtype),
+            "b": jnp.zeros((dout,), dtype)}
+
+
+def init(key, cfg: CNNConfig, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "conv1": _conv_init(k1, 3, cfg.channels, cfg.conv1_filters, dtype),
+        "conv2": _conv_init(k2, 3, cfg.conv1_filters, cfg.conv2_filters, dtype),
+        "fc1": _fc_init(k3, cfg.flat_dim, cfg.fc_hidden, dtype),
+        "fc2": _fc_init(k4, cfg.fc_hidden, cfg.num_labels, dtype),  # the head
+    }
+
+
+def axes(cfg: CNNConfig):
+    return {
+        "conv1": {"w": ("conv", "conv", None, None), "b": (None,)},
+        "conv2": {"w": ("conv", "conv", None, None), "b": (None,)},
+        "fc1": {"w": (None, "mlp"), "b": ("mlp",)},
+        "fc2": {"w": ("mlp", None), "b": (None,)},
+    }
+
+
+# PHSFL pytree partition (core/split.py builds masks from these)
+CLIENT_KEYS = ("conv1",)
+BODY_KEYS = ("conv2", "fc1")
+HEAD_KEYS = ("fc2",)
+
+
+def _conv(p, x):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool(x):
+    return jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                                 (1, 2, 2, 1), "VALID")
+
+
+def client_forward(params, x):
+    """w_{u,0}: images (B,H,W,C) -> cut-layer activations o_fp."""
+    return _maxpool(jax.nn.relu(_conv(params["conv1"], x)))
+
+
+def server_forward(params, o_fp):
+    """w_{u,1} = [body; head]: cut activations -> logits."""
+    h = _maxpool(jax.nn.relu(_conv(params["conv2"], o_fp)))
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    return h @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def apply(params, x):
+    return server_forward(params, client_forward(params, x))
+
+
+def loss_and_acc(params, x, y):
+    logits = apply(params, x)
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
+    acc = (logits.argmax(-1) == y).mean()
+    return nll, acc
+
+
+def loss_fn(params, x, y):
+    return loss_and_acc(params, x, y)[0]
+
+
+def cut_activation_size(cfg: CNNConfig, batch: int) -> int:
+    """Elements of o_fp for one mini-batch (Remark 1: N x Z_c)."""
+    s = cfg.image_size // 2
+    return batch * s * s * cfg.conv1_filters

@@ -1,0 +1,72 @@
+"""Parameter-creation helpers.
+
+Convention used across the model zoo: every module provides
+
+    init(key, ...)   -> params            (tree of arrays)
+    axes(...)        -> axes tree         (same structure; leaves = tuples of
+                                           logical axis names)
+
+keeping the two separate lets us ``jax.vmap`` inits over a leading 'stack'
+dim for scanned layer groups without tracing string metadata.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+def truncated_normal(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+def dense(key, d_in: int, d_out, *, bias: bool = False, dtype=jnp.float32,
+          scale: float | None = None):
+    """Linear layer params; d_out may be a tuple for multi-dim outputs."""
+    out_dims = d_out if isinstance(d_out, tuple) else (d_out,)
+    shape = (d_in, *out_dims)
+    if scale is None:
+        scale = 1.0 / np.sqrt(d_in)
+    params = {"w": truncated_normal(key, shape, scale, dtype)}
+    if bias:
+        params["b"] = jnp.zeros(out_dims, dtype)
+    return params
+
+
+def dense_axes(axes: tuple, *, bias: bool = False):
+    out = {"w": axes}
+    if bias:
+        out["b"] = axes[1:]
+    return out
+
+
+def norm(d: int, kind: str, dtype=jnp.float32):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    raise ValueError(kind)
+
+
+def norm_axes(kind: str):
+    if kind == "rmsnorm":
+        return {"scale": ("embed",)}
+    return {"scale": ("embed",), "bias": ("embed",)}
+
+
+def embedding(key, vocab: int, d: int, dtype=jnp.float32):
+    return {"table": truncated_normal(key, (vocab, d), 1.0, dtype)}
+
+
+def embedding_axes():
+    return {"table": ("vocab", "embed")}
+
+
+def stack_axes(axes_tree):
+    """Prefix every axes leaf with the scanned 'stack' dim."""
+    return jax.tree.map(
+        lambda a: ("stack", *a), axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and not isinstance(x, dict))

@@ -1,0 +1,146 @@
+"""Multi-head Latent Attention (DeepSeek-V2, arXiv:2405.04434).
+
+Train/prefill use the *expanded* form; decode uses the *absorbed* form that
+attends directly in the kv_lora latent space — the whole point of MLA is the
+(S, kv_lora + qk_rope) decode cache instead of (S, H, 2*head_dim).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import NEG_INF
+from repro.models.init_utils import dense, dense_axes, norm, norm_axes
+from repro.models.layers import apply_norm, apply_rope
+
+
+def mla_init(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    m = cfg.mla
+    h = cfg.num_heads
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    return {
+        # query path: d -> q_lora -> H*(nope+rope)
+        "q_a": dense(k1, cfg.d_model, m.q_lora_rank, dtype=dtype),
+        "q_a_norm": norm(m.q_lora_rank, "rmsnorm", dtype),
+        "q_b": dense(k2, m.q_lora_rank,
+                     (h, m.qk_nope_head_dim + m.qk_rope_head_dim), dtype=dtype),
+        # kv path: d -> (kv_lora + rope)
+        "kv_a": dense(k3, cfg.d_model, m.kv_lora_rank + m.qk_rope_head_dim,
+                      dtype=dtype),
+        "kv_a_norm": norm(m.kv_lora_rank, "rmsnorm", dtype),
+        "kv_b": dense(k4, m.kv_lora_rank,
+                      (h, m.qk_nope_head_dim + m.v_head_dim), dtype=dtype),
+        "o": dense(k5, h * m.v_head_dim, cfg.d_model, dtype=dtype,
+                   scale=1.0 / math.sqrt(h * m.v_head_dim)),
+    }
+
+
+def mla_axes(cfg: ModelConfig):
+    return {
+        "q_a": dense_axes(("embed", None)),
+        "q_a_norm": norm_axes("rmsnorm"),
+        "q_b": dense_axes((None, "heads", "head_dim")),
+        "kv_a": dense_axes(("embed", None)),
+        "kv_a_norm": norm_axes("rmsnorm"),
+        "kv_b": dense_axes((None, "heads", "head_dim")),
+        "o": dense_axes(("heads", "embed")),
+    }
+
+
+def _project_q(p, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    qa = apply_norm(p["q_a_norm"], x @ p["q_a"]["w"], "rmsnorm")
+    q = jnp.einsum("bsr,rhk->bshk", qa, p["q_b"]["w"])
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latent_kv(p, cfg: ModelConfig, x, positions):
+    m = cfg.mla
+    kv = x @ p["kv_a"]["w"]                               # (B,S,kv_lora+rope)
+    c_kv = apply_norm(p["kv_a_norm"], kv[..., :m.kv_lora_rank], "rmsnorm")
+    k_rope = kv[..., None, m.kv_lora_rank:]               # (B,S,1,rope)
+    k_rope = apply_rope(k_rope, positions, cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope                                   # (B,S,R), (B,S,rope)
+
+
+def mla_apply(p, cfg: ModelConfig, x, *, positions=None, causal: bool = True,
+              impl: str = "auto"):
+    """Expanded-form full-sequence MLA (train / prefill).
+
+    Routed through the shared self_attention machinery (dense for short
+    sequences, chunked online-softmax for 32k prefill) by concatenating the
+    rope and nope query/key components into one (nope+rope)-dim head.
+    """
+    m = cfg.mla
+    b, s, _ = x.shape
+    pos = positions if positions is not None \
+        else jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    q_nope, q_rope = _project_q(p, cfg, x, pos)
+    c_kv, k_rope = _latent_kv(p, cfg, x, pos)
+    kvb = jnp.einsum("bsr,rhk->bshk", c_kv, p["kv_b"]["w"])
+    k_nope = kvb[..., :m.qk_nope_head_dim]                # (B,S,H,nope)
+    v = kvb[..., m.qk_nope_head_dim:]                     # (B,S,H,v)
+
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)        # (B,S,H,nope+rope)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  k_nope.shape[:3] + (m.qk_rope_head_dim,))],
+        axis=-1)
+    from repro.models.attention import self_attention
+    out = self_attention(q, k, v, causal=causal, impl=impl)
+    out = out.reshape(b, s, cfg.num_heads * m.v_head_dim)
+    return out @ p["o"]["w"]
+
+
+# --------------------------------------------------------------- decode ----
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode_attend(p, cfg: ModelConfig, x, cache, index):
+    """Absorbed-form one-token decode.
+
+    q_nope is pushed through W_uk so attention happens in latent space:
+      logit_s = (q_nope W_uk) . c_kv[s] + q_rope . k_rope[s]
+      out     = (sum_s p_s c_kv[s]) W_uv
+    Cache is (S, kv_lora + rope) — 576 floats/token instead of 2*H*hd.
+    """
+    m = cfg.mla
+    b = x.shape[0]
+    pos = jnp.full((b, 1), index, jnp.int32)
+    q_nope, q_rope = _project_q(p, cfg, x, pos)           # (B,1,H,*)
+    c_new, kr_new = _latent_kv(p, cfg, x, pos)            # (B,1,R), (B,1,rope)
+
+    ck = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), index, axis=1)
+    kr = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), index, axis=1)
+
+    w_uk = p["kv_b"]["w"][..., :m.qk_nope_head_dim]       # (R,H,nope)
+    w_uv = p["kv_b"]["w"][..., m.qk_nope_head_dim:]       # (R,H,v)
+
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope, w_uk)    # (B,1,H,R)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    logits = (jnp.einsum("bqhr,bsr->bhqs", q_lat.astype(jnp.float32),
+                         ck.astype(jnp.float32))
+              + jnp.einsum("bqhd,bsd->bhqs", q_rope.astype(jnp.float32),
+                           kr.astype(jnp.float32))) * scale
+    valid = jnp.arange(ck.shape[1]) <= index
+    logits = logits + jnp.where(valid, 0.0, NEG_INF)[None, None, None, :]
+    probs = jax.nn.softmax(logits, axis=-1)
+    out_lat = jnp.einsum("bhqs,bsr->bqhr", probs, ck.astype(jnp.float32))
+    out = jnp.einsum("bqhr,rhv->bqhv", out_lat, w_uv.astype(jnp.float32))
+    out = out.reshape(b, 1, cfg.num_heads * m.v_head_dim).astype(x.dtype)
+    return out @ p["o"]["w"], {"c_kv": ck, "k_rope": kr}

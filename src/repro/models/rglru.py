@@ -1,0 +1,110 @@
+"""RecurrentGemma / Griffin RG-LRU recurrent block (arXiv:2402.19427).
+
+Training/prefill uses ``jax.lax.associative_scan`` over the diagonal linear
+recurrence h_t = a_t * h_{t-1} + b_t (log-space-stable gates); decode is the
+O(1) step.  The Pallas ``rglru_scan`` kernel implements the same recurrence
+with blocked VMEM tiles.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.init_utils import dense, dense_axes, truncated_normal
+from repro.models.xlstm import causal_conv1d
+
+_C = 8.0  # the paper's fixed scalar c in a_t = exp(-c * softplus(Lambda) * r_t)
+
+
+def rglru_init(key, cfg: ModelConfig, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    g = cfg.rglru
+    w = g.lru_width or cfg.d_model
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a^c spans (0.9, 0.999) roughly — standard LRU init
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log(u)/c)
+    return {
+        "in_x": dense(ks[1], cfg.d_model, w, dtype=dtype),
+        "in_gate": dense(ks[2], cfg.d_model, w, dtype=dtype),
+        "conv": truncated_normal(ks[3], (g.conv_kernel, w),
+                                 1.0 / math.sqrt(g.conv_kernel), dtype),
+        "w_a": dense(ks[4], w, w, dtype=dtype, scale=1.0 / math.sqrt(w)),
+        "w_x": dense(ks[5], w, w, dtype=dtype, scale=1.0 / math.sqrt(w)),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "b_x": jnp.zeros((w,), jnp.float32),
+        "lam": lam,
+        "out": dense(jax.random.fold_in(key, 7), w, cfg.d_model, dtype=dtype),
+    }
+
+
+def rglru_axes(cfg: ModelConfig):
+    return {
+        "in_x": dense_axes(("embed", "lru")),
+        "in_gate": dense_axes(("embed", "lru")),
+        "conv": ("conv", "lru"),
+        "w_a": dense_axes(("lru", "lru")),
+        "w_x": dense_axes(("lru", "lru")),
+        "b_a": ("lru",),
+        "b_x": ("lru",),
+        "lam": ("lru",),
+        "out": dense_axes(("lru", "embed")),
+    }
+
+
+def _gates(p, u):
+    """log_a (B,S,W) and gated input b_t for the recurrence."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"]["w"].astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(uf @ p["w_x"]["w"].astype(jnp.float32) + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r          # (B,S,W), <= 0
+    a2 = jnp.exp(2.0 * log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9)) * (i * uf)
+    return log_a, b
+
+
+def rglru_scan_assoc(log_a, b, h0=None):
+    """h_t = exp(log_a_t) * h_{t-1} + b_t via associative scan over S."""
+    if h0 is not None:
+        # fold initial state into the first step
+        b = b.at[:, 0].add(jnp.exp(log_a[:, 0]) * h0)
+
+    def combine(x, y):
+        la1, b1 = x
+        la2, b2 = y
+        return la1 + la2, jnp.exp(la2) * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (log_a, b), axis=1)
+    return h
+
+
+def rglru_block_apply(p, cfg: ModelConfig, x, *, cache=None, index=None):
+    """Full recurrent sublayer: proj -> conv -> RG-LRU -> gated out proj."""
+    xb = x @ p["in_x"]["w"]
+    gate = jax.nn.gelu(x @ p["in_gate"]["w"])
+    conv_state = cache["conv"] if cache is not None else None
+    u, conv_state = causal_conv1d(xb, p["conv"], conv_state)
+    log_a, b = _gates(p, u)
+    if cache is None:
+        h = rglru_scan_assoc(log_a, b)
+        new_cache = None
+    else:
+        h_prev = cache["h"]
+        h = jnp.exp(log_a[:, 0]) * h_prev + b[:, 0]
+        new_cache = {"conv": conv_state, "h": h}
+        h = h[:, None]
+    out = (h.astype(x.dtype) * gate) @ p["out"]["w"]
+    return out, new_cache
+
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    g = cfg.rglru
+    w = g.lru_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, g.conv_kernel - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }

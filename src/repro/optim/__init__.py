@@ -1,0 +1,18 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    sgd,
+    momentum,
+    adamw,
+    masked,
+    make_optimizer,
+    apply_updates,
+    global_norm,
+    clip_by_global_norm,
+)
+from repro.optim.schedules import constant, cosine_decay, warmup_cosine
+
+__all__ = [
+    "Optimizer", "sgd", "momentum", "adamw", "masked", "make_optimizer",
+    "apply_updates", "global_norm", "clip_by_global_norm",
+    "constant", "cosine_decay", "warmup_cosine",
+]

@@ -1,0 +1,147 @@
+"""Optimizers from scratch (optax is not available in this container).
+
+API mirrors the optax gradient-transformation style:
+
+    opt = masked(sgd(lr), trainable_mask)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+``masked`` zeroes updates where the mask is False — this is how the PHSFL
+frozen head (Eq. 12 of the paper: lr=0 for w_{1,hd}) is realized, and how the
+personalization phase (Eq. 18: only the head trains) is realized with the
+complementary mask.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def _lr_at(lr, count):
+    return lr(count) if callable(lr) else lr
+
+
+def sgd(lr) -> Optimizer:
+    """Plain SGD (the paper's optimizer; no state beyond a step count)."""
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step_lr = _lr_at(lr, state["count"])
+        updates = jax.tree.map(lambda g: -step_lr * g, grads)
+        return updates, {"count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32),
+                "mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params):
+        mu = jax.tree.map(lambda m, g: beta * m + g, state["mu"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: g + beta * m, mu, grads)
+        else:
+            upd = mu
+        step_lr = _lr_at(lr, state["count"])
+        updates = jax.tree.map(lambda u: -step_lr * u, upd)
+        return updates, {"count": state["count"] + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+        return {"count": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(z, params),
+                "v": jax.tree.map(z, params)}
+
+    def update(grads, state, params):
+        count = state["count"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        step_lr = _lr_at(lr, count)
+
+        def upd(m_, v_, p):
+            mh = m_ / c1
+            vh = v_ / c2
+            u = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-step_lr * u).astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"count": count, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def masked(opt: Optimizer, mask: PyTree) -> Optimizer:
+    """Apply ``opt`` only where mask is True; zero updates elsewhere.
+
+    Inner state is kept for every leaf (simplicity over memory); the masked
+    leaves simply never move.  ``mask`` is a pytree of Python bools matching
+    the params tree structure.
+    """
+
+    def init(params):
+        return opt.init(params)
+
+    def update(grads, state, params):
+        # zero out gradients of frozen leaves before the inner update so that
+        # stateful optimizers do not accumulate moments for them either.
+        gz = jax.tree.map(lambda m, g: g if m else jnp.zeros_like(g), mask, grads)
+        updates, state = opt.update(gz, state, params)
+        updates = jax.tree.map(lambda m, u: u if m else jnp.zeros_like(u),
+                               mask, updates)
+        return updates, state
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32)
+                                      + u.astype(jnp.float32)).astype(p.dtype),
+                        params, updates)
+
+
+def global_norm(tree: PyTree):
+    sq = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(sq))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (g + 1e-9))
+    return jax.tree.map(lambda x: x * scale, grads)
+
+
+def make_optimizer(name: str, lr, *, momentum_beta: float = 0.9,
+                   weight_decay: float = 0.0) -> Optimizer:
+    if name == "sgd":
+        return sgd(lr)
+    if name == "momentum":
+        return momentum(lr, momentum_beta)
+    if name == "adamw":
+        return adamw(lr, weight_decay=weight_decay)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,28 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda count: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, decay_steps: int, alpha: float = 0.0):
+    def sched(count):
+        t = jnp.minimum(count.astype(jnp.float32), decay_steps) / decay_steps
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * ((1 - alpha) * cos + alpha)
+    return sched
+
+
+def warmup_cosine(lr: float, warmup_steps: int, decay_steps: int,
+                  alpha: float = 0.0):
+    cos = cosine_decay(lr, max(decay_steps - warmup_steps, 1), alpha)
+
+    def sched(count):
+        c = count.astype(jnp.float32)
+        warm = lr * c / max(warmup_steps, 1)
+        return jnp.where(c < warmup_steps, warm, cos(count - warmup_steps))
+    return sched

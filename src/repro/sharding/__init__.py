@@ -1,0 +1,14 @@
+from repro.sharding.rules import (
+    LOGICAL_AXES,
+    spec_for,
+    params_specs,
+    add_client_axis,
+    data_axes,
+    named_sharding,
+    constrain,
+)
+
+__all__ = [
+    "LOGICAL_AXES", "spec_for", "params_specs", "add_client_axis",
+    "data_axes", "named_sharding", "constrain",
+]

@@ -1,0 +1,129 @@
+"""Logical-axis -> mesh-axis partitioning rules.
+
+Every model init returns a parallel *axes tree* whose leaves are tuples of
+logical axis names, one per array dim (``("embed", "mlp")``); this module
+turns those into ``PartitionSpec``s for a concrete mesh, with
+divisibility-aware fallback (a dim that does not divide evenly over its
+assigned mesh axes is replicated instead — GSPMD then propagates whatever is
+cheapest).
+
+Two modes:
+
+- ``tp``       tensor-parallel only ("model" axis).  Used inside the
+               paper-faithful PHSFL round, where the "data"/"pod" axes are
+               *manual* client/ES axes and each client owns a full replica.
+- ``fsdp_tp``  additionally shards the d_model ("embed") dim of the weights
+               over the data axes (ZeRO-3/FSDP style).  Used for the shared
+               -server beyond-paper mode and for serving.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.utils.tree import axes_leaf
+
+# canonical logical axis names used by the model zoo
+LOGICAL_AXES = (
+    "vocab",       # vocabulary dim
+    "embed",       # d_model dim
+    "mlp",         # d_ff dim
+    "heads",       # query-head dim (fused heads*head_dim or head count)
+    "kv_heads",    # kv-head count dim
+    "head_dim",    # per-head feature dim
+    "expert",      # MoE expert count dim
+    "lru",         # RG-LRU width dim
+    "stack",       # scanned-layer stack dim
+    "conv",        # conv kernel spatial dims
+)
+
+# tensor-parallel rules: logical axis -> mesh axis
+_TP_RULES = {
+    "vocab": ("model",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "expert": ("model",),
+    "lru": ("model",),
+}
+
+# kv_heads shard over model only when the count divides; handled dynamically.
+_TP_OPTIONAL = {
+    "kv_heads": ("model",),
+}
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The mesh axes that play the 'client/batch' role."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, names: tuple[str, ...]) -> int:
+    size = 1
+    for n in names:
+        size *= mesh.shape[n]
+    return size
+
+
+def spec_for(shape: tuple[int, ...], axes: tuple[Any, ...], mesh: Mesh,
+             mode: str = "tp") -> P:
+    """PartitionSpec for one array given its logical axes."""
+    assert len(shape) == len(axes), f"shape {shape} vs axes {axes}"
+    used: set[str] = set()
+    entries: list[Any] = []
+    for dim, ax in zip(shape, axes):
+        assigned = None
+        candidates: tuple[str, ...] = ()
+        if ax in _TP_RULES:
+            candidates = _TP_RULES[ax]
+        elif ax in _TP_OPTIONAL:
+            candidates = _TP_OPTIONAL[ax]
+        elif ax == "embed" and mode == "fsdp_tp":
+            candidates = data_axes(mesh)
+        if candidates and not (set(candidates) & used):
+            if all(c in mesh.axis_names for c in candidates):
+                if dim % _axis_size(mesh, candidates) == 0:
+                    assigned = candidates if len(candidates) > 1 else candidates[0]
+                    used.update(candidates)
+        entries.append(assigned)
+    return P(*entries)
+
+
+def params_specs(params, axes_tree, mesh: Mesh, mode: str = "tp"):
+    """Map a params tree + axes tree -> PartitionSpec tree."""
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_a = jax.tree_util.tree_flatten(axes_tree, is_leaf=axes_leaf)[0]
+    assert len(flat_p) == len(flat_a), (
+        f"params/axes trees disagree: {len(flat_p)} vs {len(flat_a)}")
+    specs = [spec_for(tuple(p.shape), a, mesh, mode) for p, a in zip(flat_p, flat_a)]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def add_client_axis(spec_tree, mesh: Mesh):
+    """Prefix every spec with the manual client axes (paper-faithful mode).
+
+    Per-client parameter replicas carry a leading dim of size
+    num_pods*clients_per_pod, sharded over ("pod","data").
+    """
+    ca = data_axes(mesh)
+    lead = ca if len(ca) > 1 else ca[0]
+
+    def _prefix(s: P) -> P:
+        return P(lead, *tuple(s))
+
+    return jax.tree.map(_prefix, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def named_sharding(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x

@@ -1,0 +1,25 @@
+"""Analytical FLOP accounting (used for the MODEL_FLOPS roofline term)."""
+
+from __future__ import annotations
+
+
+def matmul_flops(m: int, k: int, n: int) -> int:
+    """FLOPs of an (m,k) @ (k,n) matmul (multiply-adds counted as 2)."""
+    return 2 * m * k * n
+
+
+def dense_model_flops(num_params: int, num_tokens: int) -> int:
+    """The standard 6*N*D training-FLOPs estimate (fwd 2ND + bwd 4ND)."""
+    return 6 * num_params * num_tokens
+
+
+def forward_model_flops(num_params: int, num_tokens: int) -> int:
+    """2*N*D forward-only estimate (prefill / decode)."""
+    return 2 * num_params * num_tokens
+
+
+def attention_flops(batch: int, q_len: int, kv_len: int, num_heads: int,
+                    head_dim: int, *, backward: bool = False) -> int:
+    """QK^T + AV flops for (possibly rectangular) attention."""
+    f = 2 * batch * num_heads * q_len * kv_len * head_dim * 2  # qk and av
+    return f * 3 if backward else f

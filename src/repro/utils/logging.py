@@ -1,0 +1,26 @@
+"""Tiny structured logger (stdout, no deps)."""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+
+
+class MetricLogger:
+    def __init__(self, name: str = "repro", stream=None):
+        self.name = name
+        self.stream = stream or sys.stdout
+        self._t0 = time.time()
+
+    def log(self, step: int | None = None, **metrics):
+        rec = {"t": round(time.time() - self._t0, 3)}
+        if step is not None:
+            rec["step"] = step
+        for k, v in metrics.items():
+            try:
+                rec[k] = float(v)
+            except (TypeError, ValueError):
+                rec[k] = str(v)
+        print(f"[{self.name}] " + json.dumps(rec), file=self.stream, flush=True)
+        return rec

@@ -1,0 +1,118 @@
+"""Pytree utilities used across the framework.
+
+The framework represents model parameters as nested dicts of ``jnp.ndarray``
+leaves.  Logical-axis metadata lives in a *parallel* tree whose leaves are
+tuples of axis names (``("embed", "mlp")``); helpers here treat tuples as
+leaves where needed.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _is_axes_leaf(x: Any) -> bool:
+    """Leaves of an axes tree are tuples of (str | None)."""
+    return isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+
+
+def axes_leaf(x: Any) -> bool:  # public alias
+    return _is_axes_leaf(x)
+
+
+def path_str(path) -> str:
+    """Render a jax key path as 'a/b/0/c'."""
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        elif isinstance(p, jax.tree_util.GetAttrKey):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def tree_paths(tree: PyTree, is_leaf: Callable[[Any], bool] | None = None) -> list[str]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+    return [path_str(p) for p, _ in flat]
+
+
+def map_with_path(fn: Callable[[str, Any], Any], tree: PyTree,
+                  is_leaf: Callable[[Any], bool] | None = None) -> PyTree:
+    """tree_map where fn receives (path_string, leaf)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: fn(path_str(p), x), tree, is_leaf=is_leaf)
+
+
+def mask_by_path(tree: PyTree, patterns: list[str],
+                 is_leaf: Callable[[Any], bool] | None = None) -> PyTree:
+    """Boolean mask tree: True where the leaf path matches any regex pattern."""
+    regs = [re.compile(p) for p in patterns]
+    return map_with_path(
+        lambda path, _: any(r.search(path) for r in regs), tree, is_leaf=is_leaf)
+
+
+def tree_size(tree: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree.leaves(tree))
+
+
+def tree_bytes(tree: PyTree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def merge_trees(mask: PyTree, a: PyTree, b: PyTree) -> PyTree:
+    """Select leaf from ``a`` where mask is True else from ``b``."""
+    return jax.tree.map(lambda m, x, y: x if m else y, mask, a, b)
+
+
+def select_tree(mask: PyTree, tree: PyTree) -> PyTree:
+    """Keep only leaves where mask is True (others replaced by None subtree).
+
+    Returns a tree of the same structure with non-selected leaves set to None;
+    useful for reporting.
+    """
+    return jax.tree.map(lambda m, x: x if m else None, mask, tree)
+
+
+def tree_allfinite(tree: PyTree):
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(tree)
+              if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)]
+    if not leaves:
+        return jnp.asarray(True)
+    return jnp.stack(leaves).all()
+
+
+def tree_zeros_like(tree: PyTree) -> PyTree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree.map(lambda x, y: x + y, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree.map(lambda x: x * s, a)
+
+
+def tree_weighted_sum(trees: list[PyTree], weights) -> PyTree:
+    """sum_i weights[i] * trees[i]  (the FedAvg aggregation primitive)."""
+    assert len(trees) == len(weights) and trees, "need >=1 tree"
+    out = tree_scale(trees[0], weights[0])
+    for t, w in zip(trees[1:], weights[1:]):
+        out = tree_add(out, tree_scale(t, w))
+    return out
+
+
+def tree_l2_distance(a: PyTree, b: PyTree):
+    sq = jax.tree.map(lambda x, y: jnp.sum((x.astype(jnp.float32) - y.astype(jnp.float32)) ** 2), a, b)
+    return jnp.sqrt(sum(jax.tree.leaves(sq)))

@@ -1,0 +1,35 @@
+"""Checkpoint roundtrip."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.configs.registry import get_arch
+from repro.models import build_model
+
+
+def test_roundtrip(tmp_path):
+    cfg = get_arch("xlstm-350m").reduced()
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 3, params)
+    save_checkpoint(d, 7, params)
+    assert latest_step(d) == 7
+    target = jax.tree.map(lambda x: jnp.zeros_like(x), params)
+    restored = load_checkpoint(d, 7, target)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    import pytest
+    params = {"w": jnp.ones((3, 3))}
+    d = str(tmp_path / "c")
+    save_checkpoint(d, 0, params)
+    with pytest.raises(ValueError):
+        load_checkpoint(d, 0, {"w": jnp.ones((2, 2))})
+    with pytest.raises(KeyError):
+        load_checkpoint(d, 0, {"w2": jnp.ones((3, 3))})

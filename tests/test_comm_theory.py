@@ -1,0 +1,85 @@
+"""Remark-1 communication accounting + Theorem-1 bound calculator."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.configs.registry import get_arch
+from repro.core import (BoundInputs, bound_terms, comm_for_cnn, comm_for_lm,
+                        lr_limit, uniform_weights)
+
+
+def test_cnn_comm_model_paper_inequality():
+    """Remark 1 scrutinized: for the paper's OWN CNN (2.2M params, cut-layer
+    activations 16384 floats/sample), the per-round activation traffic
+    DOMINATES and Phi_PHSFL > Phi_HFL at the paper's kappa0=5, N=32 —
+    the 'Z >> Z_0 + Z_c' claim holds for Z but the N*Z_c term does not
+    vanish.  Recorded as a finding in EXPERIMENTS.md; the inequality DOES
+    hold for the 100B-scale LMs (test_lm_comm_model)."""
+    import dataclasses
+    cm = comm_for_cnn(CNN_CFG, dataset_size=500)
+    assert not cm.phsfl_wins(kappa0=5)
+    # ...but the inequality flips in the regime the remark actually
+    # describes: a much bigger model with the same cut activations.
+    big = dataclasses.replace(cm, total_params=cm.total_params * 1000)
+    assert big.phsfl_wins(kappa0=5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 20))
+def test_comm_monotone_in_kappa0(k0):
+    cm = comm_for_cnn(CNN_CFG, dataset_size=500)
+    assert cm.phi_phsfl_bits(k0 + 1) > cm.phi_phsfl_bits(k0)
+
+
+def test_lm_comm_model():
+    cfg = get_arch("mistral-large-123b")
+    cm = comm_for_lm(cfg, seq_len=4096, dataset_size=10_000)
+    # for LMs with a 2-block client side, shipping activations is cheaper
+    # than shipping the full 123B model
+    assert cm.phi_hfl_bits() > cm.phi_phsfl_bits(kappa0=5)
+    assert cm.client_params < cm.total_params * 0.2
+
+
+def _bi(eta=1e-3, beta=1.0, k0=5, k1=3):
+    au, ab = uniform_weights(4, 25)
+    return BoundInputs(eta=eta, beta=beta, sigma2=1.0, eps0_2=0.5, eps1_2=0.5,
+                       kappa0=k0, kappa1=k1, T=1500, f0_minus_fT=2.0,
+                       alpha_u=au, alpha_b=ab)
+
+
+def test_bound_terms_positive_and_finite():
+    t = bound_terms(_bi())
+    for k, v in t.items():
+        if k == "eta_ok":
+            continue
+        assert np.isfinite(v), k
+        assert v >= -1e-12, (k, v)
+    assert t["eta_ok"]
+
+
+def test_bound_lr_condition():
+    assert lr_limit(1.0, 5, 3) == pytest.approx(1 / (2 * np.sqrt(5) * 15))
+    t = bound_terms(_bi(eta=0.1))
+    assert not t["eta_ok"]
+
+
+def test_heterogeneity_terms_scale_with_divergence():
+    """eps0/eps1 terms grow with data heterogeneity — the paper's motivation
+    for personalization under skewed Dirichlet splits."""
+    lo = bound_terms(_bi())
+    bi_hi = BoundInputs(**{**_bi().__dict__, "eps0_2": 5.0, "eps1_2": 5.0})
+    hi = bound_terms(bi_hi)
+    assert hi["eps0_divergence"] > lo["eps0_divergence"]
+    assert hi["eps1_divergence"] > lo["eps1_divergence"]
+    assert hi["total"] > lo["total"]
+
+
+def test_more_local_steps_loosen_bound():
+    """Larger kappa0*kappa1 (less frequent sync) increases the variance and
+    divergence terms at fixed eta — Remark 3."""
+    small = bound_terms(_bi(k0=2, k1=1))
+    big = bound_terms(_bi(k0=8, k1=3))
+    assert big["eps0_divergence"] > small["eps0_divergence"]
+    assert big["eps1_divergence"] > small["eps1_divergence"]

@@ -1,0 +1,56 @@
+"""Dry-run machinery on a small fake mesh: build_step lowers and compiles for
+all three step kinds (subprocess so XLA device-count flags apply)."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           "--xla_disable_hlo_passes=all-reduce-promotion")
+import json
+import jax
+from repro.configs.base import ShapeConfig
+from repro.configs.registry import get_arch
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.steps import build_step
+
+results = {}
+mesh = make_debug_mesh(multi_pod=True)   # (2,2,2)
+shapes = [ShapeConfig("t", 128, 16, "train"),
+          ShapeConfig("p", 128, 8, "prefill"),
+          ShapeConfig("d", 128, 8, "decode")]
+for arch in ["gemma3-12b", "olmoe-1b-7b", "recurrentgemma-2b"]:
+    cfg = get_arch(arch).reduced()
+    for sh in shapes:
+        with jax.set_mesh(mesh):
+            b = build_step(cfg, sh, mesh)
+            compiled = jax.jit(b.fn).lower(*b.args).compile()
+            txt = compiled.as_text()
+        results[f"{arch}/{sh.kind}"] = {
+            "ok": True,
+            "has_collective": ("all-reduce" in txt or "all-gather" in txt
+                               or "collective-permute" in txt),
+        }
+print(json.dumps(results))
+"""
+
+
+@pytest.mark.slow
+def test_debug_mesh_lowering_all_step_kinds():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr[-4000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert len(rec) == 9
+    for k, v in rec.items():
+        assert v["ok"], k
+    # train steps must contain aggregation collectives
+    assert rec["gemma3-12b/train"]["has_collective"]

@@ -1,0 +1,99 @@
+"""Faithful paper-semantics simulation: short end-to-end runs."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HierarchyConfig, TrainConfig
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.core.fedsim import FedSim, centralized_sgd
+from repro.data.synthetic import make_federated_image_data
+from repro.models import cnn
+
+
+@pytest.fixture(scope="module")
+def fed_data():
+    return make_federated_image_data(8, alpha=0.3, train_per_class=40,
+                                     test_per_class=20, seed=0)
+
+
+def _mk(fed_data, freeze):
+    h = HierarchyConfig(num_edge_servers=2, clients_per_es=4, kappa0=2,
+                        kappa1=2, global_rounds=3)
+    t = TrainConfig(learning_rate=0.05, batch_size=16, freeze_head=freeze,
+                    finetune_steps=5, finetune_lr=0.05)
+    return FedSim(CNN_CFG, fed_data, h, t, batches_per_epoch=2, seed=0)
+
+
+@pytest.mark.slow
+def test_phsfl_trains_and_freezes_head(fed_data):
+    sim = _mk(fed_data, freeze=True)
+    res = sim.run(rounds=3, log_every=1)
+    assert res.history[-1]["test_acc"] > 0.4          # learns something
+    assert res.history[-1]["train_loss"] < res.history[0]["train_loss"]
+    p0 = cnn.init(jax.random.PRNGKey(0), CNN_CFG)
+    # Eq. (12): the classifier never moves during global training.  (The
+    # weighted aggregation of bit-identical head replicas reintroduces
+    # float32 epsilon — sum(alpha_u)=1 only up to ulp — so allclose, not
+    # array_equal; the optimizer mask itself is exact, see test_optim.)
+    np.testing.assert_allclose(np.asarray(res.global_params["fc2"]["w"]),
+                               np.asarray(p0["fc2"]["w"]), rtol=0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(res.global_params["fc2"]["b"]),
+                               np.asarray(p0["fc2"]["b"]), rtol=0, atol=1e-5)
+
+
+@pytest.mark.slow
+def test_hsfl_baseline_head_moves(fed_data):
+    sim = _mk(fed_data, freeze=False)
+    res = sim.run(rounds=2, log_every=1)
+    p0 = cnn.init(jax.random.PRNGKey(0), CNN_CFG)
+    assert not np.allclose(np.asarray(res.global_params["fc2"]["w"]),
+                           np.asarray(p0["fc2"]["w"]))
+
+
+@pytest.mark.slow
+def test_personalization_improves_per_client_accuracy(fed_data):
+    sim = _mk(fed_data, freeze=True)
+    res = sim.run(rounds=3, log_every=3)
+    heads, per = sim.personalize(res.global_params)
+    # personalized models beat the shared global model on local test sets
+    assert per["acc"].mean() >= res.per_client_global["acc"].mean() - 1e-6
+    # heads differ per client
+    w = np.asarray(heads["w"])
+    assert not np.allclose(w[0], w[1])
+
+
+@pytest.mark.slow
+def test_centralized_genie_upper_bound(fed_data):
+    t = TrainConfig(learning_rate=0.05, batch_size=32)
+    _, metrics = centralized_sgd(CNN_CFG, fed_data, t, epochs=3, seed=0)
+    assert metrics["acc"] > 0.5
+
+
+def test_kappa_1_1_single_client_equals_centralized_steps(fed_data):
+    """With B=1, U=1, kappa0=kappa1=1, one fedsim round == plain SGD steps
+    (aggregation is the identity)."""
+    data = make_federated_image_data(1, alpha=100.0, train_per_class=40,
+                                     test_per_class=10, seed=1)
+    h = HierarchyConfig(num_edge_servers=1, clients_per_es=1, kappa0=1,
+                        kappa1=1, global_rounds=1)
+    t = TrainConfig(learning_rate=0.05, batch_size=16, freeze_head=True)
+    sim = FedSim(CNN_CFG, data, h, t, batches_per_epoch=1, seed=3)
+    # manual reference with identical sampling
+    import copy
+    rng_state = copy.deepcopy(sim.rng)
+    res = sim.run(rounds=1, log_every=1)
+    x, y = data.client_train(0)
+    idx = rng_state.choice(len(x), size=16, replace=len(x) < 16)
+    from repro.core.fedsim import split_grad
+    p = cnn.init(sim.key, CNN_CFG)
+    loss, g = split_grad(p, jnp.asarray(x[idx]), jnp.asarray(y[idx]))
+    ref = {k: jax.tree.map(lambda a, b: a - 0.05 * b, p[k], g[k])
+           for k in p}
+    ref["fc2"] = p["fc2"]                      # frozen head
+    for a, b in zip(jax.tree.leaves(res.global_params),
+                    jax.tree.leaves(ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-6)

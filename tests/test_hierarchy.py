@@ -1,0 +1,77 @@
+"""Hierarchical aggregation math (Eqs. 4-7, 14-16) — property-based."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import edge_aggregate, global_aggregate, sgd_step_index
+from repro.configs.base import HierarchyConfig
+
+
+def _tree(rng, scale=1.0):
+    return {"a": jnp.asarray(rng.normal(size=(3, 4)).astype(np.float32) * scale),
+            "b": {"c": jnp.asarray(rng.normal(size=(5,)).astype(np.float32) * scale)}}
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(0, 2 ** 31 - 1))
+def test_aggregate_of_identical_trees_is_identity(n, seed):
+    rng = np.random.default_rng(seed)
+    t = _tree(rng)
+    w = rng.dirichlet(np.ones(n))
+    agg = edge_aggregate([t] * n, w)
+    for a, b in zip(jax.tree.leaves(agg), jax.tree.leaves(t)):
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 2 ** 31 - 1))
+def test_aggregate_is_convex(n, seed):
+    """Every coordinate of the aggregate lies in [min, max] of the inputs."""
+    rng = np.random.default_rng(seed)
+    trees = [_tree(rng) for _ in range(n)]
+    w = rng.dirichlet(np.ones(n))
+    agg = edge_aggregate(trees, w)
+    for leaves in zip(jax.tree.leaves(agg), *(jax.tree.leaves(t) for t in trees)):
+        a, rest = np.asarray(leaves[0]), np.stack([np.asarray(x) for x in leaves[1:]])
+        assert (a <= rest.max(0) + 1e-5).all()
+        assert (a >= rest.min(0) - 1e-5).all()
+
+
+def test_two_level_equals_flat_weighted_mean():
+    """Eq. (7): CS aggregation of ES aggregates == flat weighted sum with
+    weights alpha_b * alpha_u."""
+    rng = np.random.default_rng(1)
+    B, U = 3, 4
+    trees = [[_tree(rng) for _ in range(U)] for _ in range(B)]
+    au = [rng.dirichlet(np.ones(U)) for _ in range(B)]
+    ab = rng.dirichlet(np.ones(B))
+    es = [edge_aggregate(trees[b], au[b]) for b in range(B)]
+    two_level = global_aggregate(es, ab)
+    flat_trees = [trees[b][u] for b in range(B) for u in range(U)]
+    flat_w = np.array([ab[b] * au[b][u] for b in range(B) for u in range(U)])
+    from repro.utils.tree import tree_weighted_sum
+    flat = tree_weighted_sum(flat_trees, list(flat_w))
+    for a, b in zip(jax.tree.leaves(two_level), jax.tree.leaves(flat)):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+
+
+def test_weight_simplex_enforced():
+    rng = np.random.default_rng(2)
+    trees = [_tree(rng), _tree(rng)]
+    import pytest
+    with pytest.raises(AssertionError):
+        edge_aggregate(trees, [0.7, 0.7])
+
+
+@given(st.integers(0, 20), st.integers(0, 5), st.integers(0, 4))
+@settings(max_examples=30, deadline=None)
+def test_sgd_step_index(t2, t1, t0):
+    """Eq. (1) bookkeeping is strictly monotone in (t2, t1, t0) lex order."""
+    h = HierarchyConfig(kappa0=5, kappa1=3)
+    t = sgd_step_index(t2, min(t1, h.kappa1 - 1), min(t0, h.kappa0 - 1), h)
+    t_next = sgd_step_index(t2, min(t1, h.kappa1 - 1), min(t0, h.kappa0 - 1), h)
+    assert t == t_next
+    assert sgd_step_index(t2 + 1, 0, 0, h) > t

@@ -1,0 +1,103 @@
+"""Datacenter PHSFL round semantics on a fake 8-device mesh.
+
+These tests need XLA_FLAGS set before jax initializes, so they run a child
+python process (the same pattern the dry-run uses) and assert on its output.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=8 "
+                           "--xla_disable_hlo_passes=all-reduce-promotion")
+import json
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs.registry import get_arch
+from repro.configs.base import HierarchyConfig, TrainConfig
+from repro.models import build_model
+from repro.core import (make_phsfl_round, init_stacked_params,
+                        build_optimizer, edge_aggregate)
+from repro.data.synthetic import synthetic_token_batch
+from repro.optim import apply_updates
+
+mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+cfg = get_arch("mistral-large-123b").reduced()
+model = build_model(cfg)
+h = HierarchyConfig(num_edge_servers=2, clients_per_es=2, kappa0=2, kappa1=1)
+t = TrainConfig(learning_rate=0.05, freeze_head=True, local_steps_in_step=2,
+                remat=False)
+C = 4
+params = init_stacked_params(model, jax.random.PRNGKey(0), C)
+opt, mask = build_optimizer(model, t)
+state1 = opt.init(jax.tree.map(lambda x: x[0], params))
+opt_state = jax.tree.map(lambda x: jnp.broadcast_to(x[None], (C,) + x.shape),
+                         state1)
+nb = synthetic_token_batch(0, C * 2 * 2, 32, cfg.vocab_size)
+batch = {k: jnp.asarray(v).reshape(C, 2, 2, 32) for k, v in nb.items()}
+au = jnp.full((C,), 0.5, jnp.float32)
+ab = jnp.full((C,), 0.5, jnp.float32)
+
+with jax.set_mesh(mesh):
+    rnd = make_phsfl_round(model, h, t, mesh, global_sync=True)
+    p2, s2, metrics = jax.jit(rnd.fn)(params, opt_state, batch, au, ab)
+
+# ---------- host reference: same per-client local SGD + weighted means ----
+def host_round(params, batch):
+    client_params = []
+    for c in range(C):
+        p = jax.tree.map(lambda x: x[c], params)
+        s = opt.init(p)
+        for k_ in range(2):
+            mb = {kk: vv[c, k_] for kk, vv in batch.items()}
+            loss, g = jax.value_and_grad(lambda q: model.loss(q, mb))(p)
+            upd, s = opt.update(g, s, p)
+            p = apply_updates(p, upd)
+        client_params.append(p)
+    es0 = edge_aggregate(client_params[:2], [0.5, 0.5])
+    es1 = edge_aggregate(client_params[2:], [0.5, 0.5])
+    from repro.core import global_aggregate
+    return global_aggregate([es0, es1], [0.5, 0.5])
+
+ref = host_round(params, batch)
+got = jax.tree.map(lambda x: x[0], p2)
+errs = [float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+        for a, b in zip(jax.tree.leaves(got), jax.tree.leaves(ref))]
+
+head_same = bool(jnp.array_equal(params["lm_head"]["w"][0],
+                                 p2["lm_head"]["w"][0]))
+all_clients_equal = all(
+    bool(jnp.allclose(x[0], x[i], atol=1e-6))
+    for x in jax.tree.leaves(p2) for i in range(1, C))
+print(json.dumps({
+    "max_err": max(errs),
+    "loss": float(metrics["loss"]),
+    "head_frozen": head_same,
+    "clients_synced": all_clients_equal,
+}))
+"""
+
+
+@pytest.mark.slow
+def test_phsfl_round_matches_host_reference():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert out.returncode == 0, out.stderr[-3000:]
+    rec = json.loads(out.stdout.strip().splitlines()[-1])
+    assert rec["head_frozen"], rec
+    assert rec["clients_synced"], rec
+    assert rec["max_err"] < 5e-3, rec      # bf16-free reduced cfg, f32 agg
+    assert np_isfinite(rec["loss"])
+
+
+def np_isfinite(x):
+    import math
+    return math.isfinite(x)

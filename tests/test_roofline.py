@@ -1,0 +1,102 @@
+"""Roofline machinery: HLO collective parser + analytic cost model sanity."""
+
+import pytest
+
+from repro.configs.registry import get_arch
+from repro.configs.shapes import SHAPES
+from repro.launch.analytic import (cost_for, decode_cost,
+                                   forward_flops_per_token, prefill_cost,
+                                   train_cost)
+from repro.launch.roofline import (Roofline, collective_bytes,
+                                   model_flops_for)
+
+HLO = """
+ENTRY %main {
+  %p0 = bf16[8,128]{1,0} parameter(0)
+  %ar = bf16[8,128]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add
+  %ag = f32[16,128]{1,0} all-gather(%p0), dimensions={0}
+  %rs.1 = f32[4,128]{1,0} reduce-scatter(%ag), dimensions={0}, to_apply=%add
+  %cp = bf16[8,128]{1,0} collective-permute(%ar), source_target_pairs={{0,1}}
+  %dot = f32[8,8]{1,0} dot(%p0, %p0)
+}
+"""
+
+
+def test_collective_parser():
+    out = collective_bytes(HLO)
+    assert out["all-reduce"] == 8 * 128 * 2
+    assert out["all-gather"] == 16 * 128 * 4
+    assert out["reduce-scatter"] == 4 * 128 * 4
+    assert out["collective-permute"] == 8 * 128 * 2
+    assert out["all-to-all"] == 0
+    assert out["total"] == sum(out[k] for k in
+                               ("all-reduce", "all-gather", "reduce-scatter",
+                                "all-to-all", "collective-permute"))
+
+
+def test_forward_flops_scaling():
+    cfg12 = get_arch("gemma3-12b")
+    cfg27 = get_arch("gemma3-27b")
+    f12 = forward_flops_per_token(cfg12, 4096)
+    f27 = forward_flops_per_token(cfg27, 4096)
+    assert f27 > f12 > 0
+    # roughly 2N flops/token
+    assert 1.5e10 < f12 < 6e10
+
+
+def test_moe_flops_are_active_not_total():
+    cfg = get_arch("olmoe-1b-7b")
+    f = forward_flops_per_token(cfg, 4096)
+    # olmoe active ~1.3B params -> ~2*N_active + attention; far below 64-expert dense
+    dense_equiv = 2 * 7e9
+    assert f < dense_equiv
+
+
+def test_train_cost_structure():
+    cfg = get_arch("mistral-large-123b")
+    shape = SHAPES["train_4k"]
+    mesh = {"data": 16, "model": 16}
+    c = train_cost(cfg, shape, mesh)
+    assert c.flops > 0 and c.hbm_bytes > 0 and c.coll_bytes > 0
+    # multi-pod adds the CS-level aggregation bytes
+    c2 = train_cost(cfg, shape, {"pod": 2, "data": 16, "model": 16})
+    assert c2.detail["coll_pod"] > 0
+    assert c.detail["coll_pod"] == 0
+
+
+def test_shared_server_cuts_edge_aggregation():
+    cfg = get_arch("command-r-plus-104b")
+    shape = SHAPES["train_4k"]
+    mesh = {"data": 16, "model": 16}
+    faithful = train_cost(cfg, shape, mesh, mode="paper_faithful")
+    shared = train_cost(cfg, shape, mesh, mode="shared_server")
+    # the paper-Remark-1 effect at datacenter scale: the kappa0-boundary
+    # full-model all-reduce disappears (body syncs via per-step grad
+    # all-reduce, client block is tiny)
+    assert shared.detail["coll_edge"] < faithful.detail["coll_edge"] * 1.2
+
+
+def test_decode_memory_bound():
+    cfg = get_arch("command-r-plus-104b")
+    c = decode_cost(cfg, SHAPES["decode_32k"], {"data": 16, "model": 16})
+    r = Roofline(arch="x", shape="decode_32k", mesh="single", chips=256,
+                 flops=c.flops, hbm_bytes=c.hbm_bytes, coll_bytes=c.coll_bytes)
+    assert r.memory_s > r.compute_s       # decode is memory/collective bound
+
+
+def test_model_flops_kinds():
+    cfg = get_arch("gemma3-12b")
+    tr = model_flops_for(cfg, SHAPES["train_4k"], "train")
+    pf = model_flops_for(cfg, SHAPES["prefill_32k"], "prefill")
+    dc = model_flops_for(cfg, SHAPES["decode_32k"], "decode")
+    assert tr > pf > dc > 0
+
+
+@pytest.mark.parametrize("shape_name", ["train_4k", "prefill_32k",
+                                        "decode_32k"])
+def test_cost_for_all_archs(shape_name):
+    from repro.configs.registry import ARCHS
+    for name in ARCHS:
+        c = cost_for(get_arch(name), SHAPES[shape_name],
+                     {"data": 16, "model": 16})
+        assert c.flops > 0 and c.hbm_bytes > 0, name

@@ -1,0 +1,73 @@
+"""Partitioning rules: logical axes -> PartitionSpec with divisibility-aware
+fallback, on an abstract production-shaped mesh (no devices needed)."""
+
+import jax
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs.registry import ARCHS, get_arch
+from repro.models import build_model
+from repro.sharding.rules import params_specs, spec_for
+
+
+def _mesh(multi=False):
+    if multi:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+    return AbstractMesh((16, 16), ("data", "model"))
+
+
+def test_spec_for_basic_rules():
+    mesh = _mesh()
+    # mlp dim sharded over model
+    assert spec_for((12288, 33792), ("embed", "mlp"), mesh) == P(None, "model")
+    # fsdp mode also shards embed over data
+    assert spec_for((12288, 33792), ("embed", "mlp"), mesh, mode="fsdp_tp") \
+        == P("data", "model")
+    # vocab over model
+    assert spec_for((256000, 12288), ("vocab", "embed"), mesh) == P("model", None)
+
+
+def test_spec_for_divisibility_fallback():
+    mesh = _mesh()
+    # 10 heads do not divide 16-way -> replicated
+    assert spec_for((2560, 10, 256), ("embed", "heads", "head_dim"), mesh) \
+        == P(None, None, None)
+    # 96 heads divide -> sharded
+    assert spec_for((12288, 96, 128), ("embed", "heads", "head_dim"), mesh) \
+        == P(None, "model", None)
+    # embed 1024 doesn't divide 32-way on multipod fsdp -> replicated
+    m2 = _mesh(multi=True)
+    assert spec_for((1000, 512), ("embed", "mlp"), m2, mode="fsdp_tp") \
+        == P(None, "model")
+
+
+def test_no_axis_used_twice():
+    mesh = _mesh()
+    s = spec_for((512, 512), ("mlp", "mlp"), mesh)
+    used = [a for a in s if a is not None]
+    assert len(used) <= 1
+
+
+def test_params_specs_cover_all_archs_production_mesh():
+    """Every param leaf of every FULL arch gets a valid spec on (16,16) and
+    (2,16,16) — dims mentioned in specs must divide the mesh axes."""
+    for multi in (False, True):
+        mesh = _mesh(multi)
+        for name in ARCHS:
+            cfg = get_arch(name)
+            model = build_model(cfg)
+            shapes = jax.eval_shape(lambda k: model.init(k),
+                                    jax.random.PRNGKey(0))
+            specs = params_specs(shapes, model.axes(), mesh, mode="fsdp_tp")
+            flat_s = jax.tree.leaves(
+                specs, is_leaf=lambda x: isinstance(x, P))
+            flat_p = jax.tree.leaves(shapes)
+            assert len(flat_s) == len(flat_p)
+            for s, p in zip(flat_s, flat_p):
+                for dim, entry in zip(p.shape, tuple(s)):
+                    if entry is None:
+                        continue
+                    axes = entry if isinstance(entry, tuple) else (entry,)
+                    size = 1
+                    for a in axes:
+                        size *= mesh.shape[a]
+                    assert dim % size == 0, (name, p.shape, s)

@@ -1,0 +1,92 @@
+"""PHSFL split semantics: pytree partition, masks, and the Remark-2
+equivalence of split-learning gradients to monolithic backprop."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.configs.registry import ARCHS, get_arch
+from repro.core import (GLOBAL_TRAIN, HSFL_TRAIN, PERSONALIZE, count_parts,
+                        monolithic_grad, part_masks, split_grad,
+                        split_spec_for, trainable_mask)
+from repro.models import build_model, cnn
+
+
+def test_cnn_split_parts_cover_everything():
+    params = cnn.init(jax.random.PRNGKey(0), CNN_CFG)
+    spec = split_spec_for(CNN_CFG)
+    masks = part_masks(params, spec)
+    flat = [jax.tree.leaves(masks[p]) for p in ("client", "body", "head")]
+    for triple in zip(*flat):
+        assert sum(triple) == 1, "every leaf in exactly one part"
+    counts = count_parts(params, spec)
+    assert counts["client"] > 0 and counts["body"] > 0 and counts["head"] > 0
+    # the head is the small classifier; the body is the bulk (paper Sec. II)
+    assert counts["body"] > counts["head"]
+    assert counts["body"] > counts["client"]
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_lm_split_parts(arch):
+    cfg = get_arch(arch).reduced()
+    model = build_model(cfg)
+    shapes = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+    spec = split_spec_for(cfg)
+    masks = part_masks(shapes, spec)
+    for triple in zip(*(jax.tree.leaves(masks[p])
+                        for p in ("client", "body", "head"))):
+        assert sum(triple) == 1
+    counts = count_parts(shapes, spec)
+    # head must be exactly the lm_head
+    assert counts["head"] > 0
+    # client side includes the embedding (+ lead blocks for decoder LMs)
+    assert counts["client"] > 0
+
+
+def test_trainable_mask_phases():
+    params = cnn.init(jax.random.PRNGKey(0), CNN_CFG)
+    spec = split_spec_for(CNN_CFG)
+    m_global = trainable_mask(params, spec, GLOBAL_TRAIN)
+    m_hsfl = trainable_mask(params, spec, HSFL_TRAIN)
+    m_pers = trainable_mask(params, spec, PERSONALIZE)
+    # PHSFL: head frozen; HSFL: everything trains; personalize: only head
+    assert not any(jax.tree.leaves(
+        {k: m_global[k] for k in cnn.HEAD_KEYS}))
+    assert all(jax.tree.leaves(m_hsfl))
+    pers_leaves = jax.tree_util.tree_flatten_with_path(m_pers)[0]
+    for path, v in pers_leaves:
+        is_head = any("fc2" in str(p) for p in path)
+        assert v == is_head
+
+
+def test_split_grad_equals_monolithic():
+    """Remark 2: the cut-layer dataflow does not change the gradients."""
+    rng = np.random.default_rng(0)
+    params = cnn.init(jax.random.PRNGKey(1), CNN_CFG)
+    x = jnp.asarray(rng.normal(size=(16, 32, 32, 3)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=16).astype(np.int32))
+    l1, g1 = split_grad(params, x, y)
+    l2, g2 = monolithic_grad(params, x, y)
+    assert jnp.allclose(l1, l2, atol=1e-6)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_cut_layer_position_does_not_change_loss():
+    """Remark 2 at the LM scale: n_client_layers only re-partitions the
+    pytree; the forward function is identical."""
+    import dataclasses
+    cfg1 = get_arch("mistral-large-123b").reduced(num_layers=4)
+    cfg2 = dataclasses.replace(cfg1, n_client_layers=2)
+    m1, m2 = build_model(cfg1), build_model(cfg2)
+    p1 = m1.init(jax.random.PRNGKey(0))
+    p2 = m2.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.arange(64, dtype=jnp.int32).reshape(1, 64) % cfg1.vocab_size}
+    batch["labels"] = batch["tokens"]
+    l1 = m1.loss(p1, batch)
+    l2 = m2.loss(p2, batch)
+    assert jnp.allclose(l1, l2, rtol=1e-5), (l1, l2)
