@@ -1,0 +1,75 @@
+"""Deadline sweep: wireless participation vs accuracy vs round time.
+
+Runs the faithful CNN simulator (FedSim) under a Rayleigh-faded channel at
+several edge-round deadlines and emits a JSON table: tighter deadlines drop
+more stragglers per round (cheaper, faster rounds) but aggregate fewer
+clients (noisier global model) — the wall-clock/accuracy trade-off the
+wireless papers optimize.
+
+    PYTHONPATH=src python benchmarks/wireless_sweep.py \
+        [--deadlines 0.5 1.0 2.0 inf] [--rounds 3] [--out sweep.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs.base import HierarchyConfig, TrainConfig, WirelessConfig
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.core.fedsim import FedSim
+from repro.data.synthetic import make_federated_image_data
+
+
+def run_one(fed, deadline: float, *, rounds: int, seed: int) -> dict:
+    h = HierarchyConfig(num_edge_servers=2, clients_per_es=4, kappa0=2,
+                        kappa1=2, global_rounds=rounds)
+    t = TrainConfig(learning_rate=0.05, batch_size=16, freeze_head=True)
+    # an infinite deadline still pays the channel's round times — it is the
+    # "wait for every straggler" baseline, not the ideal network
+    wireless = WirelessConfig(model="rayleigh", mean_uplink_mbps=20.0,
+                              mean_downlink_mbps=80.0, latency_s=0.02,
+                              deadline_s=deadline, seed=seed)
+    sim = FedSim(CNN_CFG, fed, h, t, batches_per_epoch=2, seed=seed,
+                 wireless=wireless)
+    res = sim.run(rounds=rounds, log_every=rounds)
+    parts = [n["participants"] for n in res.network] or [h.num_clients]
+    times = [n["round_time_s"] for n in res.network] or [0.0]
+    return {
+        "deadline_s": deadline,
+        "final_loss": res.history[-1]["test_loss"],
+        "final_acc": res.history[-1]["test_acc"],
+        "mean_participants": float(np.mean(parts)),
+        "mean_round_time_s": float(np.mean(times)),
+        "total_sim_time_s": res.total_sim_time_s,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--deadlines", type=float, nargs="+",
+                    default=[0.5, 1.0, 2.0, float("inf")])
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--alpha", type=float, default=0.3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args(argv)
+    assert args.clients == 8, "grid is fixed at 2 ES x 4 clients"
+
+    fed = make_federated_image_data(args.clients, alpha=args.alpha,
+                                    train_per_class=40, test_per_class=20,
+                                    seed=args.seed)
+    table = [run_one(fed, d, rounds=args.rounds, seed=args.seed)
+             for d in args.deadlines]
+    print(json.dumps(table, indent=2))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(table, f, indent=2)
+    return table
+
+
+if __name__ == "__main__":
+    main()

@@ -234,6 +234,33 @@ class TrainConfig:
     agg_dtype: str = "float32"       # aggregation psum dtype (perf knob)
 
 
+# --------------------------------------------------------------------------
+# Wireless network scenario (channel + participation; see repro.wireless)
+# --------------------------------------------------------------------------
+@dataclass(frozen=True)
+class WirelessConfig:
+    """Per-client channel + participation knobs for the wireless simulator.
+
+    See ``repro/wireless/__init__.py`` for the full knob documentation.
+    """
+    model: str = "ideal"             # ideal | static | rayleigh | trace
+    mean_uplink_mbps: float = 10.0   # mean per-client uplink rate
+    mean_downlink_mbps: float = 40.0  # mean per-client downlink rate
+    latency_s: float = 0.02          # per-message propagation/queueing latency
+    heterogeneity: float = 0.0       # lognormal sigma of a FIXED per-client
+    #                                  rate scale (0 -> homogeneous clients)
+    trace: tuple[tuple[float, ...], ...] = ()  # (round, client) uplink Mbps
+    # ---- participation policy (scheduler) ----
+    deadline_s: float = float("inf")  # edge-round deadline; stragglers drop
+    selection: str = "deadline"      # deadline | topk | random
+    topk: int = 0                    # keep the k fastest (0 -> no cap)
+    participation_prob: float = 1.0  # Bernoulli thinning (selection="random")
+    # ---- energy ----
+    energy_budget_j: float = float("inf")  # lifetime per-client budget
+    tx_power_w: float = 0.5          # uplink transmit power
+    seed: int = 0
+
+
 @dataclass(frozen=True)
 class ShapeConfig:
     name: str

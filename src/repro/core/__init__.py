@@ -7,9 +7,13 @@ from repro.core.split import (SplitSpec, split_spec_for, part_masks,
                               trainable_mask, count_parts,
                               GLOBAL_TRAIN, HSFL_TRAIN, PERSONALIZE)
 from repro.core.hierarchy import (edge_aggregate, global_aggregate,
+                                  masked_edge_aggregate,
+                                  masked_global_aggregate,
                                   edge_aggregate_mesh, global_aggregate_mesh,
+                                  masked_psum_weighted,
                                   sgd_step_index, normalized_weights)
-from repro.core.phsfl import (make_phsfl_round, make_shared_server_step,
+from repro.core.phsfl import (make_phsfl_round, make_host_round,
+                              make_shared_server_step,
                               build_optimizer, abstract_params,
                               init_stacked_params, init_shared_server_params,
                               PHSFLRound, SharedServerStep)
@@ -22,9 +26,12 @@ from repro.core.theory import BoundInputs, bound_terms, lr_limit, uniform_weight
 __all__ = [
     "SplitSpec", "split_spec_for", "part_masks", "trainable_mask",
     "count_parts", "GLOBAL_TRAIN", "HSFL_TRAIN", "PERSONALIZE",
-    "edge_aggregate", "global_aggregate", "edge_aggregate_mesh",
-    "global_aggregate_mesh", "sgd_step_index", "normalized_weights",
-    "make_phsfl_round", "make_shared_server_step", "build_optimizer",
+    "edge_aggregate", "global_aggregate", "masked_edge_aggregate",
+    "masked_global_aggregate", "edge_aggregate_mesh",
+    "global_aggregate_mesh", "masked_psum_weighted",
+    "sgd_step_index", "normalized_weights",
+    "make_phsfl_round", "make_host_round",
+    "make_shared_server_step", "build_optimizer",
     "abstract_params", "init_stacked_params", "init_shared_server_params",
     "PHSFLRound", "SharedServerStep",
     "personalize_head_bank", "personalized_eval", "merge_head",

@@ -30,7 +30,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.configs.base import HierarchyConfig, TrainConfig
+from repro.configs.base import HierarchyConfig, TrainConfig, WirelessConfig
 from repro.configs.phsfl_cnn import CNNConfig
 from repro.data.synthetic import FederatedImageData
 from repro.models import cnn
@@ -73,6 +73,8 @@ class FedSimResult:
     personalized_heads: dict | None = None               # stacked (U, ...)
     per_client_global: dict | None = None                # eval of w*
     per_client_personalized: dict | None = None          # eval of w_u^K
+    network: list = field(default_factory=list)          # per-edge-round
+    total_sim_time_s: float = 0.0                        # simulated clock
 
 
 class FedSim:
@@ -80,12 +82,26 @@ class FedSim:
 
     def __init__(self, cfg: CNNConfig, data: FederatedImageData,
                  hcfg: HierarchyConfig, tcfg: TrainConfig, *,
-                 batches_per_epoch: int = 5, seed: int = 0):
+                 batches_per_epoch: int = 5, seed: int = 0,
+                 wireless: WirelessConfig | None = None):
         assert data.num_clients == hcfg.num_clients
         self.cfg, self.data, self.h, self.t = cfg, data, hcfg, tcfg
         self.batches_per_epoch = batches_per_epoch
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
+
+        # wireless scenario: channel + participation (None => ideal network)
+        self.scheduler = None
+        if wireless is not None and wireless.model != "ideal":
+            from repro.core.comm import comm_for_cnn
+            from repro.wireless import make_scheduler
+            mean_size = int(np.mean([len(i) for i in data.train_indices]))
+            comm = comm_for_cnn(cfg, dataset_size=max(mean_size, 2),
+                                batch_size=tcfg.batch_size,
+                                batches_per_epoch=batches_per_epoch)
+            self.scheduler = make_scheduler(wireless, hcfg.num_clients,
+                                            comm, hcfg.kappa0)
+        self._edge_round = 0
 
         U, B = hcfg.num_clients, hcfg.num_edge_servers
         self.U, self.B, self.Ub = U, B, hcfg.clients_per_es
@@ -164,24 +180,71 @@ class FedSim:
                 jnp.asarray(np.stack(ws)))
 
     # ------------------------------------------------------- aggregation --
-    def _edge_aggregate(self, stacked):
-        """Eqs. (14)-(15): per-ES weighted average, broadcast back."""
+    def _masked_edge_weights(self, mask):
+        """(B, Ub) weights: alpha_u renormalized over participants, plus the
+        (B,) empty-ES indicator.  A fully-participating ES keeps its alpha_u
+        weights EXACTLY (no renormalization round-off), so an all-ones mask
+        reproduces the ideal-network path bit-for-bit."""
         B, Ub = self.B, self.Ub
-        w = jnp.asarray(self.alpha_u.reshape(B, Ub), jnp.float32)
+        aw = self.alpha_u.reshape(B, Ub)                     # float64
+        m = np.asarray(mask, np.float64).reshape(B, Ub) > 0
+        raw = np.where(m, aw, 0.0)
+        tot = raw.sum(axis=1, keepdims=True)
+        full = m.all(axis=1, keepdims=True)
+        w = np.where(full, aw, raw / np.where(tot > 0, tot, 1.0))
+        return w, ~m.any(axis=1)
 
-        def agg(x):
+    def _edge_aggregate(self, stacked, mask=None, fallback=None):
+        """Eqs. (14)-(15): per-ES weighted average, broadcast back.
+
+        With a participation ``mask`` the weights renormalize over the
+        participating clients of each ES; an ES with zero participants keeps
+        ``fallback`` (its model from before this edge round's local steps).
+        """
+        B, Ub = self.B, self.Ub
+        if mask is None:
+            w64, empty = self.alpha_u.reshape(B, Ub), np.zeros(B, bool)
+        else:
+            w64, empty = self._masked_edge_weights(mask)
+            assert fallback is not None or not empty.any()
+        w = jnp.asarray(w64, jnp.float32)
+
+        def agg(x, fb=None):
             xr = x.reshape((B, Ub) + x.shape[1:])
             wexp = w.reshape((B, Ub) + (1,) * (x.ndim - 1))
             m = (xr * wexp).sum(axis=1, keepdims=True)
-            return jnp.broadcast_to(m, xr.shape).reshape(x.shape)
+            out = jnp.broadcast_to(m, xr.shape)
+            if fb is not None and empty.any():
+                sel = jnp.asarray(empty).reshape((B, 1) + (1,) * (x.ndim - 1))
+                out = jnp.where(sel, fb.reshape(xr.shape), out)
+            return out.reshape(x.shape)
 
-        return jax.tree.map(agg, stacked)
+        if mask is None or fallback is None:
+            return jax.tree.map(agg, stacked)
+        return jax.tree.map(agg, stacked, fallback)
 
-    def _global_aggregate(self, stacked):
-        """Eq. (16): CS-level weighted average over ESs, broadcast back."""
+    def _global_aggregate(self, stacked, es_mask=None):
+        """Eq. (16): CS-level weighted average over ESs, broadcast back.
+
+        ``es_mask`` marks ESs that had at least one participating client
+        this global round; alpha_b renormalizes over them (all ESs still
+        RECEIVE the broadcast).  With no participating ES at all the models
+        are left untouched (no global sync happened).
+        """
         B, Ub = self.B, self.Ub
         wu = jnp.asarray(self.alpha_u.reshape(B, Ub), jnp.float32)
-        wb = jnp.asarray(self.alpha_b, jnp.float32)
+        if es_mask is None:
+            wb64 = self.alpha_b
+        else:
+            m = np.asarray(es_mask, np.float64) > 0
+            if not m.any():
+                return stacked
+            if m.all():
+                wb64 = self.alpha_b                          # exact path
+            else:
+                raw = np.where(m, self.alpha_b, 0.0)
+                wb64 = raw / raw.sum()
+        wb = jnp.asarray(wb64, jnp.float32)
 
         def agg(x):
             xr = x.reshape((B, Ub) + x.shape[1:])
@@ -202,22 +265,46 @@ class FedSim:
         res = FedSimResult()
         xt, yt, wt = self._stacked_test()
 
+        sched = self.scheduler
         for t2 in range(rounds):
             round_losses = []
+            es_any = np.zeros(self.B, bool)
+            parts = []
             for t1 in range(h.kappa1):                       # edge rounds
+                prev = stacked if sched is not None else None
                 for _ in range(h.kappa0):                    # local epochs
                     for _ in range(self.batches_per_epoch):  # minibatches
                         x, y = self._sample_minibatches(t.batch_size)
                         stacked, loss = self._client_step(stacked, x, y)
                         round_losses.append(float(loss.mean()))
-                stacked = self._edge_aggregate(stacked)      # Eq. 14-15
-            stacked = self._global_aggregate(stacked)        # Eq. 16
+                if sched is None:
+                    stacked = self._edge_aggregate(stacked)  # Eq. 14-15
+                else:                                        # masked Eq. 14-15
+                    rep = sched.step(self._edge_round)
+                    self._edge_round += 1
+                    es_any |= (rep.mask.reshape(self.B, self.Ub) > 0).any(1)
+                    parts.append(rep.num_participants)
+                    res.total_sim_time_s += rep.round_time_s
+                    res.network.append({
+                        "edge_round": rep.round_idx,
+                        "participants": rep.num_participants,
+                        "round_time_s": rep.round_time_s})
+                    stacked = self._edge_aggregate(stacked, mask=rep.mask,
+                                                   fallback=prev)
+            if sched is None:
+                stacked = self._global_aggregate(stacked)    # Eq. 16
+            else:                                            # masked Eq. 16
+                stacked = self._global_aggregate(stacked, es_mask=es_any)
 
             if (t2 + 1) % log_every == 0 or t2 == rounds - 1:
                 gl, ga = self._weighted_eval(stacked, xt, yt, wt)
-                res.history.append({"round": t2 + 1,
-                                    "train_loss": float(np.mean(round_losses)),
-                                    "test_loss": gl, "test_acc": ga})
+                row = {"round": t2 + 1,
+                       "train_loss": float(np.mean(round_losses)),
+                       "test_loss": gl, "test_acc": ga}
+                if sched is not None:
+                    row["mean_participants"] = float(np.mean(parts))
+                    row["sim_time_s"] = res.total_sim_time_s
+                res.history.append(row)
         res.global_params = jax.tree.map(lambda x: x[0], stacked)
         res.per_client_global = self._per_client_eval(stacked, xt, yt, wt)
         return res

@@ -44,6 +44,43 @@ def global_aggregate(edge_trees: list, alpha_b) -> object:
     return tree_weighted_sum(edge_trees, list(w))
 
 
+# ------------------------------------------- participation-masked (host) ----
+def _masked_weighted_sum(trees: list, weights, mask, fallback):
+    """Weighted sum over the sub-list where mask > 0, weights renormalized to
+    the simplex over participants.  A full mask takes the exact unmasked code
+    path (bit-for-bit identical to ``tree_weighted_sum(trees, weights)``);
+    an empty mask returns ``fallback`` (the previous model) or raises."""
+    m = np.asarray(mask, dtype=np.float64)
+    w = np.asarray(weights, dtype=np.float64)
+    assert m.shape == w.shape == (len(trees),)
+    if (m > 0).all():
+        return tree_weighted_sum(trees, list(w))
+    keep = np.flatnonzero(m > 0)
+    if len(keep) == 0:
+        if fallback is None:
+            raise ValueError("no participants and no fallback model given")
+        return fallback
+    sub_w = w[keep]
+    return tree_weighted_sum([trees[i] for i in keep],
+                             list(sub_w / sub_w.sum()))
+
+
+def masked_edge_aggregate(client_trees: list, alpha_u, mask,
+                          fallback=None) -> object:
+    """Eqs. (14-15) over the participating clients of one ES: the straggler
+    mask zeroes dropped clients and the alpha_u weights renormalize over the
+    survivors; with no survivors the ES keeps ``fallback`` (its previous
+    edge model)."""
+    return _masked_weighted_sum(client_trees, alpha_u, mask, fallback)
+
+
+def masked_global_aggregate(edge_trees: list, alpha_b, mask,
+                            fallback=None) -> object:
+    """Eq. (16) over the ESs that had at least one participant this global
+    round; alpha_b renormalizes over them."""
+    return _masked_weighted_sum(edge_trees, alpha_b, mask, fallback)
+
+
 # ------------------------------------------------------------ mesh side ----
 def psum_weighted(tree, weight, axis_name: str, agg_dtype=jnp.float32):
     """sum_i weight_i * tree_i over a manual mesh axis.
@@ -61,6 +98,33 @@ def psum_weighted(tree, weight, axis_name: str, agg_dtype=jnp.float32):
         return acc.astype(t.dtype)
 
     return jax.tree.map(agg, tree)
+
+
+def masked_psum_weighted(tree, weight, mask, fallback, axis_name: str,
+                         agg_dtype=jnp.float32):
+    """Participation-masked variant of :func:`psum_weighted` (inside
+    shard_map).
+
+    ``mask`` is this shard's 0/1 participation scalar.  Weights renormalize
+    over the participating shards; with zero participants every shard keeps
+    its ``fallback`` tree (the model from before this round's local steps).
+    When ALL shards participate the divisor is exactly 1.0 — multiplying by a
+    1.0 mask and dividing by 1.0 are exact, so the result is bit-identical
+    to the unmasked ``psum_weighted`` path.
+    """
+    m = mask.astype(agg_dtype)
+    w = weight.astype(agg_dtype) * m
+    n_part = jax.lax.psum(m, axis_name)
+    n_all = jax.lax.psum(jnp.ones((), agg_dtype), axis_name)
+    total = jax.lax.psum(w, axis_name)
+    denom = jnp.where(n_part >= n_all, jnp.asarray(1.0, agg_dtype),
+                      jnp.where(total > 0, total, jnp.asarray(1.0, agg_dtype)))
+
+    def agg(t, fb):
+        acc = jax.lax.psum(t.astype(agg_dtype) * w, axis_name) / denom
+        return jnp.where(n_part > 0, acc.astype(t.dtype), fb)
+
+    return jax.tree.map(agg, tree, fallback)
 
 
 def edge_aggregate_mesh(tree, alpha_u_shard, agg_dtype=jnp.float32):

@@ -35,7 +35,8 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import HierarchyConfig, ModelConfig, TrainConfig
-from repro.core.hierarchy import edge_aggregate_mesh, global_aggregate_mesh
+from repro.core.hierarchy import (edge_aggregate_mesh, global_aggregate_mesh,
+                                  masked_psum_weighted)
 from repro.core.split import (GLOBAL_TRAIN, HSFL_TRAIN, split_spec_for,
                               trainable_mask, part_masks)
 from repro.models.registry import Model
@@ -44,6 +45,20 @@ from repro.sharding.rules import data_axes, params_specs
 
 
 # --------------------------------------------------------------- common ----
+def _shard_map(f, mesh: Mesh, in_specs, out_specs, manual):
+    """shard_map across jax versions: >= 0.5 exposes ``jax.shard_map`` with
+    ``axis_names``/``check_vma``; 0.4.x has the experimental API with the
+    complementary ``auto`` set and ``check_rep``."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, axis_names=set(manual),
+                             check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    auto = frozenset(mesh.axis_names) - frozenset(manual)
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False, auto=auto)
+
+
 def _client_axes(mesh: Mesh):
     ca = data_axes(mesh)
     return ca if len(ca) > 1 else ca[0]
@@ -67,6 +82,25 @@ def abstract_params(model: Model, *, stacked_clients: int | None = None):
     return shapes
 
 
+def _local_scan(model: Model, tcfg: TrainConfig, opt):
+    """One client's kappa0 local SGD steps — the SINGLE definition shared by
+    the mesh and host rounds, so their numerics cannot drift apart."""
+    def scan(p, s, batch_c):
+        def local_step(carry, mb):
+            pp, ss = carry
+            pol = None if tcfg.remat_policy == "full" else tcfg.remat_policy
+            loss, g = jax.value_and_grad(
+                lambda q: model.loss(q, mb, remat=tcfg.remat,
+                                     remat_policy=pol))(pp)
+            upd, ss = opt.update(g, ss, pp)
+            return (apply_updates(pp, upd), ss), loss
+
+        (p, s), losses = jax.lax.scan(local_step, (p, s), batch_c)
+        return p, s, losses
+
+    return scan
+
+
 def build_optimizer(model: Model, tcfg: TrainConfig):
     """Masked optimizer implementing the PHSFL frozen head (Eq. 12)."""
     spec = split_spec_for(model.cfg)
@@ -82,14 +116,23 @@ def build_optimizer(model: Model, tcfg: TrainConfig):
 @dataclass
 class PHSFLRound:
     """One compiled edge round (optionally with global sync)."""
-    fn: Callable            # (params, opt_state, batch, alpha_u, alpha_b) ->
-                            #   (params, opt_state, metrics)
+    fn: Callable            # (params, opt_state, batch, alpha_u, alpha_b
+                            #  [, mask]) -> (params, opt_state, metrics)
     params_spec: Any        # PartitionSpec tree for the stacked params
     num_clients: int
 
 
 def make_phsfl_round(model: Model, hcfg: HierarchyConfig, tcfg: TrainConfig,
-                     mesh: Mesh, *, global_sync: bool) -> PHSFLRound:
+                     mesh: Mesh, *, global_sync: bool,
+                     participation: bool = False) -> PHSFLRound:
+    """One compiled edge round.
+
+    With ``participation=True`` the returned fn takes a sixth argument: a
+    (num_clients,) 0/1 mask from the wireless scheduler.  Aggregation
+    weights renormalize over the participating clients (Eqs. 14-16 over the
+    survivors); an ES with zero participants keeps its pre-round edge model.
+    An all-ones mask is bit-identical to the unmasked round.
+    """
     cfg = model.cfg
     opt, _ = build_optimizer(model, tcfg)
     ca = _client_axes(mesh)
@@ -98,47 +141,151 @@ def make_phsfl_round(model: Model, hcfg: HierarchyConfig, tcfg: TrainConfig,
     for a in data_axes(mesh):
         num_clients *= mesh.shape[a]
 
-    def per_client(params, opt_state, batch_c, au, ab):
+    local_scan = _local_scan(model, tcfg, opt)
+
+    def per_client(params, opt_state, batch_c, au, ab, mask):
         p = _squeeze0(params)
         s = _squeeze0(opt_state)
         batch_c = _squeeze0(batch_c)
+        p_prev = p                  # edge model before this round's steps
 
-        def local_step(carry, mb):
-            pp, ss = carry
-            pol = None if tcfg.remat_policy == "full" else tcfg.remat_policy
-            loss, g = jax.value_and_grad(
-                lambda q: model.loss(q, mb, remat=tcfg.remat,
-                                     remat_policy=pol))(pp)
-            upd, ss = opt.update(g, ss, pp)
-            pp = apply_updates(pp, upd)
-            return (pp, ss), loss
-
-        (p, s), losses = jax.lax.scan(local_step, (p, s), batch_c)
+        p, s, losses = local_scan(p, s, batch_c)
 
         # ---- edge aggregation: weighted psum over clients of this ES ----
         agg_dtype = jnp.dtype(tcfg.agg_dtype)
-        p = edge_aggregate_mesh(p, au[0], agg_dtype)
-        if global_sync and "pod" in mesh.axis_names:
-            # ---- global aggregation: weighted psum over edge servers ----
-            p = global_aggregate_mesh(p, ab[0], agg_dtype)
+        if mask is None:
+            p = edge_aggregate_mesh(p, au[0], agg_dtype)
+            if global_sync and "pod" in mesh.axis_names:
+                # ---- global aggregation: weighted psum over edge servers --
+                p = global_aggregate_mesh(p, ab[0], agg_dtype)
+        else:
+            m = mask[0].astype(agg_dtype)
+            p = masked_psum_weighted(p, au[0], m, p_prev, "data", agg_dtype)
+            if global_sync and "pod" in mesh.axis_names:
+                # an ES joins the global round iff it had >= 1 participant
+                es_m = (jax.lax.psum(m, "data") > 0).astype(agg_dtype)
+                p = masked_psum_weighted(p, ab[0], es_m, p, "pod", agg_dtype)
+        # true mean over ALL clients (the P() out-spec otherwise surfaces
+        # shard 0's local loss with the replication check disabled)
         mean_loss = losses.mean()
+        for a in data_axes(mesh):
+            mean_loss = jax.lax.pmean(mean_loss, a)
         return _unsqueeze0(p), _unsqueeze0(s), mean_loss
 
     lead = P(ca)
-    shd = jax.shard_map(
-        per_client, mesh=mesh,
-        in_specs=(lead, lead, lead, lead, lead),
+    nargs = 6 if participation else 5
+    body = per_client if participation else (
+        lambda pr, st, b, au, ab: per_client(pr, st, b, au, ab, None))
+    shd = _shard_map(
+        body, mesh,
+        in_specs=(lead,) * nargs,
         out_specs=(lead, lead, P()),
-        axis_names=manual, check_vma=False)
+        manual=manual)
 
-    def round_fn(params, opt_state, batch, alpha_u, alpha_b):
-        new_p, new_s, loss = shd(params, opt_state, batch, alpha_u, alpha_b)
-        return new_p, new_s, {"loss": loss}
+    if participation:
+        def round_fn(params, opt_state, batch, alpha_u, alpha_b, mask):
+            new_p, new_s, loss = shd(params, opt_state, batch,
+                                     alpha_u, alpha_b, mask)
+            return new_p, new_s, {"loss": loss}
+    else:
+        def round_fn(params, opt_state, batch, alpha_u, alpha_b):
+            new_p, new_s, loss = shd(params, opt_state, batch,
+                                     alpha_u, alpha_b)
+            return new_p, new_s, {"loss": loss}
 
     pspec = params_specs(abstract_params(model), model.axes(), mesh, mode="tp")
     pspec = jax.tree.map(lambda s: P(ca, *tuple(s)), pspec,
-                         is_leaf=lambda x: isinstance(x, P))
+                        is_leaf=lambda x: isinstance(x, P))
     return PHSFLRound(fn=round_fn, params_spec=pspec, num_clients=num_clients)
+
+
+# --------------------------------------------- host mirror (single device) --
+def make_host_round(model: Model, hcfg: HierarchyConfig, tcfg: TrainConfig,
+                    *, num_clients: int, global_sync: bool,
+                    participation: bool = False) -> PHSFLRound:
+    """Mesh-free mirror of :func:`make_phsfl_round` for single-device runs.
+
+    Same semantics, same numerics: vmapped clients run the identical local
+    scan, then edge aggregation is a weighted mean over each ES's client
+    group in ``agg_dtype`` (and, when ``global_sync``, a weighted mean over
+    ES groups by alpha_b) — exactly what the psum path computes, so a parity
+    test can compare the two bit-for-bit at f32.  Optimizer states stay
+    per-client, matching the mesh path.  ``hcfg.num_edge_servers`` groups
+    the leading client dim; alpha_u must be normalized within each group.
+    """
+    opt, _ = build_optimizer(model, tcfg)
+    B = hcfg.num_edge_servers
+    assert num_clients % B == 0, (num_clients, B)
+    Ub = num_clients // B
+    agg_dtype = jnp.dtype(tcfg.agg_dtype)
+
+    local_scan = _local_scan(model, tcfg, opt)
+
+    def one_client(p, s, bc):
+        p, s, losses = local_scan(p, s, bc)
+        return p, s, losses.mean()
+
+    def _edge(p, p_prev, au, mask):
+        w = au.astype(agg_dtype).reshape(B, Ub)
+        if mask is not None:
+            m = mask.astype(agg_dtype).reshape(B, Ub)
+            w = w * m
+            tot = w.sum(axis=1, keepdims=True)
+            n = m.sum(axis=1, keepdims=True)
+            one = jnp.asarray(1.0, agg_dtype)
+            denom = jnp.where(n >= Ub, one, jnp.where(tot > 0, tot, one))
+
+        def agg(x, fb):
+            xr = x.astype(agg_dtype).reshape((B, Ub) + x.shape[1:])
+            wexp = w.reshape((B, Ub) + (1,) * (x.ndim - 1))
+            acc = (xr * wexp).sum(axis=1, keepdims=True)
+            if mask is not None:
+                acc = acc / denom.reshape((B, 1) + (1,) * (x.ndim - 1))
+            out = jnp.broadcast_to(acc, xr.shape).astype(x.dtype)
+            if mask is not None:
+                sel = (n > 0).reshape((B, 1) + (1,) * (x.ndim - 1))
+                out = jnp.where(sel, out, fb.reshape(xr.shape))
+            return out.reshape(x.shape)
+
+        return jax.tree.map(agg, p, p_prev)
+
+    def _global(p, ab, mask):
+        wb = ab.astype(agg_dtype).reshape(B, Ub)[:, :1]      # (B, 1)
+        if mask is not None:
+            m = (mask.astype(agg_dtype).reshape(B, Ub).sum(
+                axis=1, keepdims=True) > 0).astype(agg_dtype)  # ES mask (B,1)
+            wb = wb * m
+            tot = wb.sum()
+            n = m.sum()
+            one = jnp.asarray(1.0, agg_dtype)
+            denom = jnp.where(n >= B, one, jnp.where(tot > 0, tot, one))
+
+        def agg(x):
+            xr = x.astype(agg_dtype).reshape((B, Ub) + x.shape[1:])
+            wexp = wb.reshape((B, 1) + (1,) * (x.ndim - 1))
+            acc = (xr * wexp).sum(axis=0, keepdims=True)
+            if mask is not None:
+                acc = acc / denom
+                acc = jnp.where(n > 0, acc, xr)   # nobody synced: keep edges
+            out = jnp.broadcast_to(acc, xr.shape).astype(x.dtype)
+            return out.reshape(x.shape)
+
+        return jax.tree.map(agg, p)
+
+    def round_body(params, opt_state, batch, au, ab, mask):
+        p_prev = params
+        p, s, losses = jax.vmap(one_client)(params, opt_state, batch)
+        p = _edge(p, p_prev, au, mask)
+        if global_sync:
+            p = _global(p, ab, mask)
+        return p, s, {"loss": losses.mean()}
+
+    if participation:
+        round_fn = round_body
+    else:
+        round_fn = lambda pr, st, b, au, ab: round_body(pr, st, b, au, ab,
+                                                        None)
+    return PHSFLRound(fn=round_fn, params_spec=None, num_clients=num_clients)
 
 
 def init_stacked_params(model: Model, key, num_clients: int):

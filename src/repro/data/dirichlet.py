@@ -36,10 +36,20 @@ def dirichlet_partition(labels: np.ndarray, num_clients: int, alpha: float,
             break
     else:
         # top-up fallback (standard practice at extreme skew): move random
-        # samples from the largest clients to the starved ones.
+        # samples from the largest clients to the starved ones.  The donor
+        # must never be the starved client itself (argmax can land on it
+        # when every client is tiny, which used to move samples nowhere and
+        # loop forever), and sizes are recomputed after every single move so
+        # a drained donor stops being picked.
         for u in range(num_clients):
             while len(client_indices[u]) < min_per_client:
-                donor = int(np.argmax([len(ci) for ci in client_indices]))
+                sizes = np.array([len(ci) if i != u else -1
+                                  for i, ci in enumerate(client_indices)])
+                donor = int(np.argmax(sizes))
+                if sizes[donor] <= min_per_client:
+                    raise ValueError(
+                        f"cannot satisfy min_per_client={min_per_client}: "
+                        f"{len(labels)} samples over {num_clients} clients")
                 take = client_indices[donor].pop(
                     rng.integers(len(client_indices[donor])))
                 client_indices[u].append(take)

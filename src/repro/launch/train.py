@@ -24,14 +24,17 @@ import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import save_checkpoint
-from repro.configs.base import HierarchyConfig, TrainConfig
+from repro.configs.base import HierarchyConfig, TrainConfig, WirelessConfig
 from repro.configs.registry import get_arch
 from repro.core import (build_optimizer, init_stacked_params,
-                        make_phsfl_round, personalize_head_bank,
-                        personalized_eval)
+                        make_host_round, make_phsfl_round,
+                        personalize_head_bank, personalized_eval)
+from repro.core.comm import comm_for_lm
 from repro.data.synthetic import synthetic_token_batch
+from repro.launch.mesh import set_mesh
 from repro.models import build_model
 from repro.utils.logging import MetricLogger
+from repro.wireless import make_scheduler
 
 
 def _client_round_batch(cfg, C, k, micro, seq, seed):
@@ -75,6 +78,16 @@ def main(argv=None):
     ap.add_argument("--finetune-steps", type=int, default=5)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
+    # ---- wireless scenario (repro.wireless) ----
+    ap.add_argument("--channel", default="ideal",
+                    choices=["ideal", "static", "rayleigh"],
+                    help="per-client channel model (ideal = pre-wireless)")
+    ap.add_argument("--deadline", type=float, default=float("inf"),
+                    help="edge-round deadline in seconds; stragglers drop")
+    ap.add_argument("--mean-rate-mbps", type=float, default=100.0,
+                    help="mean per-client uplink rate")
+    ap.add_argument("--energy-budget", type=float, default=float("inf"),
+                    help="lifetime per-client uplink energy budget (J)")
     args = ap.parse_args(argv)
 
     log = MetricLogger("train")
@@ -100,61 +113,67 @@ def main(argv=None):
                        finetune_steps=args.finetune_steps,
                        finetune_lr=args.lr)
 
-    with jax.set_mesh(mesh):
+    # wireless scenario: channel + participation scheduler (None = ideal)
+    scheduler = None
+    if args.channel != "ideal":
+        wcfg = WirelessConfig(model=args.channel,
+                              mean_uplink_mbps=args.mean_rate_mbps,
+                              mean_downlink_mbps=4 * args.mean_rate_mbps,
+                              deadline_s=args.deadline,
+                              energy_budget_j=args.energy_budget,
+                              seed=args.seed)
+        comm = comm_for_lm(cfg, seq_len=args.seq,
+                           dataset_size=args.rounds * args.local_steps *
+                           args.micro, batch_size=args.micro,
+                           batches_per_epoch=1)
+        scheduler = make_scheduler(wcfg, C, comm, hcfg.kappa0)
+    participation = scheduler is not None
+
+    with set_mesh(mesh):
         if mesh.shape["data"] == C:
             round_ = make_phsfl_round(model, hcfg, tcfg, mesh,
-                                      global_sync=False)
-            round_fn = jax.jit(round_.fn)
-            mesh_clients = C
+                                      global_sync=False,
+                                      participation=participation)
         else:
-            # degenerate 1-device path: emulate the C clients with vmap and
-            # explicit aggregation (identical math; used on plain CPU)
-            from repro.core import build_optimizer as _bo
-            from repro.optim import apply_updates
-            opt, _ = _bo(model, tcfg)
-
-            def one_client(p, s, bc):
-                def step(carry, mb):
-                    pp, ss = carry
-                    loss, g = jax.value_and_grad(
-                        lambda q: model.loss(q, mb))(pp)
-                    upd, ss = opt.update(g, ss, pp)
-                    return (apply_updates(pp, upd), ss), loss
-
-                (p, s), losses = jax.lax.scan(step, (p, s), bc)
-                return p, s, losses.mean()
-
-            vclients = jax.vmap(one_client)
-
-            @jax.jit
-            def round_fn(params, opt_state, batch, au, ab):
-                p, s, losses = vclients(params, opt_state, batch)
-                mean = jax.tree.map(
-                    lambda x: jnp.broadcast_to(
-                        (x * au.reshape((C,) + (1,) * (x.ndim - 1))
-                         ).sum(0, keepdims=True).astype(x.dtype), x.shape), p)
-                return mean, s, {"loss": losses.mean()}
-
-            mesh_clients = C
+            # degenerate 1-device path: the mesh-free mirror of
+            # make_phsfl_round (same local scan, same weighted aggregation
+            # in agg_dtype, same per-client optimizer states)
+            round_ = make_host_round(model, hcfg, tcfg, num_clients=C,
+                                     global_sync=False,
+                                     participation=participation)
+        round_fn = jax.jit(round_.fn)
 
         params = init_stacked_params(model, jax.random.PRNGKey(args.seed),
-                                     mesh_clients)
+                                     C)
         opt, _ = build_optimizer(model, tcfg)
         state1 = opt.init(jax.tree.map(lambda x: x[0], params))
         opt_state = jax.tree.map(
-            lambda x: jnp.broadcast_to(x[None], (mesh_clients,) + x.shape),
+            lambda x: jnp.broadcast_to(x[None], (C,) + x.shape),
             state1)
         au = jnp.full((C,), 1.0 / C, jnp.float32)
         ab = jnp.ones((C,), jnp.float32)
 
         t0 = time.time()
+        sim_time = 0.0
         for r in range(args.rounds):
             batch = _client_round_batch(cfg, C, args.local_steps, args.micro,
                                         args.seq, seed=args.seed + r)
-            params, opt_state, metrics = round_fn(params, opt_state, batch,
-                                                  au, ab)
-            log.log(step=r, loss=metrics["loss"],
-                    s_per_round=(time.time() - t0) / (r + 1))
+            if scheduler is not None:
+                rep = scheduler.step(r)
+                sim_time += rep.round_time_s
+                mask = jnp.asarray(rep.mask, jnp.float32)
+                params, opt_state, metrics = round_fn(
+                    params, opt_state, batch, au, ab, mask)
+                log.log(step=r, loss=metrics["loss"],
+                        participants=rep.num_participants,
+                        round_time_s=rep.round_time_s,
+                        sim_time_s=sim_time,
+                        s_per_round=(time.time() - t0) / (r + 1))
+            else:
+                params, opt_state, metrics = round_fn(params, opt_state,
+                                                      batch, au, ab)
+                log.log(step=r, loss=metrics["loss"],
+                        s_per_round=(time.time() - t0) / (r + 1))
 
         # ---- personalization (Eq. 18) ----
         global_params = jax.tree.map(lambda x: x[0], params)
@@ -176,8 +195,12 @@ def main(argv=None):
             save_checkpoint(args.ckpt_dir, args.rounds, global_params)
             log.log(ckpt=1.0)
 
-    print(json.dumps({"final_loss": float(metrics["loss"]),
-                      "personalization_gain": gain}))
+    out = {"final_loss": float(metrics["loss"]),
+           "personalization_gain": gain}
+    if scheduler is not None:
+        out["sim_time_s"] = sim_time
+        out["energy_left_j_min"] = float(scheduler.energy_left.min())
+    print(json.dumps(out))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,60 @@
+"""Wireless channel + client-participation subsystem.
+
+Turns the ideal-network PHSFL simulator into a network-aware one: every
+client gets a per-edge-round uplink/downlink rate, latency, and energy
+budget; a scheduler drops stragglers against a deadline and emits a 0/1
+participation mask that the aggregation paths (``repro.core.fedsim``,
+``repro.core.phsfl``) consume by renormalizing the Eq. 14-16 weights over
+the participating clients only.
+
+``WirelessConfig`` knobs (``repro.configs.base``)
+=================================================
+
+Channel (``repro.wireless.channel.ChannelModel``):
+
+- ``model``: rate process — ``"ideal"`` (infinite rate, zero latency: the
+  pre-wireless simulator, and the default), ``"static"`` (constant rates),
+  ``"rayleigh"`` (per-round exponential fading of the received power, i.e.
+  Rayleigh amplitude), ``"trace"`` (replay ``trace`` rows).
+- ``mean_uplink_mbps`` / ``mean_downlink_mbps``: mean per-client rates.
+- ``latency_s``: per-message latency, charged once per direction per round.
+- ``heterogeneity``: sigma of a lognormal per-client rate scale drawn once
+  at construction — 0 means all clients statistically identical.
+- ``trace``: round-major tuple of per-client uplink-Mbps tuples (cycled
+  over rounds, resized over clients); downlink scales by the configured
+  downlink/uplink ratio.
+
+Participation (``repro.wireless.scheduler.ParticipationScheduler``):
+
+- ``deadline_s``: edge-round deadline; a scheduled client whose simulated
+  round time (2*latency + uplink airtime + downlink airtime for the
+  Remark-1 traffic of ``client_round_bits``) exceeds it is dropped from
+  that aggregation, and the ES waits the deadline out.
+- ``selection``: ``"deadline"`` (energy+deadline gates only), ``"topk"``
+  (schedule only the ``topk`` fastest affordable clients), ``"random"``
+  (thin schedulable clients i.i.d. with ``participation_prob``).
+- ``energy_budget_j`` / ``tx_power_w``: lifetime uplink energy budget and
+  transmit power; budgets never recharge, and a client skips any round it
+  cannot afford (under fading it may re-join a later, cheaper round).
+- ``seed``: RNG seed for fading draws, heterogeneity, and thinning.
+
+Aggregation semantics under a partial mask: participating clients keep
+their Eq. 4/6 weights, renormalized to sum to 1; an edge round with ZERO
+participants keeps the previous edge model; with a full (all-ones) mask
+every path is bit-identical to the ideal-network simulator.
+"""
+
+from repro.wireless.channel import (ChannelModel, LinkState, RoundBits,
+                                    client_round_bits)
+from repro.wireless.scheduler import ParticipationScheduler, RoundReport
+
+__all__ = [
+    "ChannelModel", "LinkState", "RoundBits", "client_round_bits",
+    "ParticipationScheduler", "RoundReport", "make_scheduler",
+]
+
+
+def make_scheduler(cfg, num_clients: int, comm, kappa0: int):
+    """Convenience: CommModel byte accounting -> channel -> scheduler."""
+    bits = client_round_bits(comm, kappa0)
+    return ParticipationScheduler(cfg, ChannelModel(cfg, num_clients), bits)

@@ -1,0 +1,113 @@
+"""Per-client wireless channel model (rates, latency, time, energy).
+
+The channel turns the byte accounting of :mod:`repro.core.comm` (Remark 1:
+cut-layer activations up, cut-layer gradients down, client-block offloads at
+the round boundary) into per-client, per-edge-round transmission TIMES and
+ENERGIES.  Three rate processes are supported:
+
+- ``static``:   rate_u(t) = mean * scale_u — a fixed, possibly heterogeneous
+                rate per client (``heterogeneity`` is the lognormal sigma of
+                scale_u, drawn once at construction);
+- ``rayleigh``: rate_u(t) = mean * scale_u * E_t where E_t ~ Exp(1) i.i.d.
+                per round — Rayleigh-amplitude fading makes the received
+                POWER exponential, and we model the achievable rate as
+                proportional to it (interference-limited linear regime);
+- ``trace``:    rate_u(t) read from ``WirelessConfig.trace`` (round-major,
+                cycled), for replaying measured traces;
+- ``ideal``:    infinite rates, zero latency — the pre-wireless simulator.
+
+All rates are in Mbps in the config and bits/s internally.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs.base import WirelessConfig
+from repro.core.comm import CommModel
+
+
+@dataclass
+class LinkState:
+    """Per-client link quality for one edge round (all arrays shape (U,))."""
+    uplink_bps: np.ndarray
+    downlink_bps: np.ndarray
+    latency_s: np.ndarray
+
+
+@dataclass(frozen=True)
+class RoundBits:
+    """Bits each client moves in one edge round (split-learning dataflow)."""
+    uplink: int
+    downlink: int
+
+
+def client_round_bits(comm: CommModel, kappa0: int) -> RoundBits:
+    """Per-edge-round traffic of ONE client under the paper's Eq. 17 terms.
+
+    Uplink:   kappa0 local epochs of (activations o_fp + minibatch indices)
+              per minibatch, plus one client-block offload (Phi_off).
+    Downlink: the matching cut-layer gradients o_bp, plus the refreshed
+              client block broadcast at the aggregation boundary.
+    """
+    per_batch_up = comm.phi_activation_bits() + comm.phi_indices_bits()
+    per_batch_down = comm.phi_activation_bits()
+    nb = comm.batches_per_epoch
+    return RoundBits(
+        uplink=kappa0 * nb * per_batch_up + comm.phi_off_bits(),
+        downlink=kappa0 * nb * per_batch_down + comm.phi_off_bits(),
+    )
+
+
+class ChannelModel:
+    """Samples per-round link states and converts bits to time/energy."""
+
+    def __init__(self, cfg: WirelessConfig, num_clients: int):
+        if cfg.model not in ("ideal", "static", "rayleigh", "trace"):
+            raise ValueError(f"unknown channel model {cfg.model!r}")
+        if cfg.model == "trace" and not cfg.trace:
+            raise ValueError("trace channel requires WirelessConfig.trace")
+        self.cfg = cfg
+        self.U = num_clients
+        self._rng = np.random.default_rng(cfg.seed)
+        # fixed per-client heterogeneity scale (lognormal, mean-1 median)
+        if cfg.heterogeneity > 0:
+            self._scale = self._rng.lognormal(
+                mean=0.0, sigma=cfg.heterogeneity, size=num_clients)
+        else:
+            self._scale = np.ones(num_clients)
+
+    # ----------------------------------------------------------- sampling --
+    def sample(self, round_idx: int) -> LinkState:
+        cfg, U = self.cfg, self.U
+        up_mean = cfg.mean_uplink_mbps * 1e6
+        down_mean = cfg.mean_downlink_mbps * 1e6
+        if cfg.model == "ideal":
+            inf = np.full(U, np.inf)
+            return LinkState(inf, inf, np.zeros(U))
+        if cfg.model == "static":
+            fade = np.ones(U)
+        elif cfg.model == "rayleigh":
+            fade = self._rng.exponential(1.0, size=U)
+        else:  # trace
+            row = np.asarray(cfg.trace[round_idx % len(cfg.trace)], float)
+            fade = np.resize(row, U) * 1e6 / up_mean  # trace IS the uplink
+        up = np.maximum(up_mean * self._scale * fade, 1.0)
+        down = np.maximum(down_mean * self._scale * fade, 1.0)
+        return LinkState(up, down, np.full(U, cfg.latency_s))
+
+    # ------------------------------------------------------ time / energy --
+    def round_time_s(self, link: LinkState, bits: RoundBits) -> np.ndarray:
+        """Per-client completion time of one edge round's traffic."""
+        with np.errstate(divide="ignore"):
+            t_up = bits.uplink / link.uplink_bps
+            t_down = bits.downlink / link.downlink_bps
+        return 2 * link.latency_s + t_up + t_down
+
+    def round_energy_j(self, link: LinkState, bits: RoundBits) -> np.ndarray:
+        """Per-client uplink transmit energy (P_tx * airtime)."""
+        with np.errstate(divide="ignore"):
+            t_up = bits.uplink / link.uplink_bps
+        return self.cfg.tx_power_w * np.where(np.isfinite(t_up), t_up, 0.0)

@@ -1,0 +1,92 @@
+"""Participation scheduling: who makes it into each edge aggregation.
+
+The scheduler composes three gates, applied in order, and emits a 0/1
+participation mask per edge round:
+
+1. **energy**  — a client skips any round whose uplink energy it can no
+   longer afford (budgets deplete by P_tx * uplink airtime each round the
+   client participates and never recharge; under a fading channel a client
+   priced out of a deep-fade round may still afford a later cheap one);
+2. **selection** — an optional scheduling cap: ``topk`` keeps the k
+   fastest affordable clients (rate-aware scheduling), ``random`` thins
+   them i.i.d. with ``participation_prob`` (unbiased client sampling);
+3. **deadline** — a scheduled client completes only if its simulated round
+   time (channel latency + uplink + downlink airtime for this round's
+   traffic) is within ``deadline_s`` (straggler dropout).
+
+The simulated edge-round wall clock is the slowest scheduled client's time
+when every scheduled client made the deadline, else the full deadline (the
+ES waits it out).  Clients the scheduler never scheduled (energy, top-k,
+thinning) cost no waiting.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.configs.base import WirelessConfig
+from repro.wireless.channel import ChannelModel, RoundBits
+
+
+@dataclass
+class RoundReport:
+    """What the network did in one edge round."""
+    round_idx: int
+    mask: np.ndarray           # (U,) float64 in {0, 1}
+    times_s: np.ndarray        # (U,) per-client completion time
+    round_time_s: float        # simulated wall clock of this edge round
+    energy_left_j: np.ndarray  # (U,) remaining budgets AFTER this round
+
+    @property
+    def num_participants(self) -> int:
+        return int(self.mask.sum())
+
+
+class ParticipationScheduler:
+    """Stateful per-edge-round participation decisions for U clients."""
+
+    def __init__(self, cfg: WirelessConfig, channel: ChannelModel,
+                 bits: RoundBits):
+        if cfg.selection not in ("deadline", "topk", "random"):
+            raise ValueError(f"unknown selection policy {cfg.selection!r}")
+        self.cfg = cfg
+        self.channel = channel
+        self.bits = bits
+        self.U = channel.U
+        self.energy_left = np.full(self.U, cfg.energy_budget_j)
+        self._rng = np.random.default_rng(cfg.seed + 1)
+
+    def step(self, round_idx: int) -> RoundReport:
+        cfg = self.cfg
+        link = self.channel.sample(round_idx)
+        times = self.channel.round_time_s(link, self.bits)
+        energy = self.channel.round_energy_j(link, self.bits)
+
+        scheduled = self.energy_left >= energy           # gate 1: energy
+        if cfg.selection == "topk" and cfg.topk > 0:     # gate 2a: k fastest
+            order = np.argsort(np.where(scheduled, times, np.inf))
+            keep = np.zeros(self.U, bool)
+            keep[order[:cfg.topk]] = True
+            scheduled &= keep
+        elif cfg.selection == "random" and cfg.participation_prob < 1.0:
+            scheduled &= self._rng.random(self.U) < cfg.participation_prob
+        alive = scheduled & (times <= cfg.deadline_s)    # gate 3: deadline
+
+        self.energy_left = np.where(alive, self.energy_left - energy,
+                                    self.energy_left)
+
+        if not alive.any():
+            # a scheduled-but-straggling client still makes the ES wait
+            round_time = (float(cfg.deadline_s)
+                          if scheduled.any() and np.isfinite(cfg.deadline_s)
+                          else 0.0)
+        elif (scheduled & ~alive).any():
+            round_time = float(cfg.deadline_s)           # ES waits it out
+        else:
+            t = times[alive].max()
+            round_time = float(t) if np.isfinite(t) else 0.0
+        return RoundReport(round_idx=round_idx, mask=alive.astype(np.float64),
+                           times_s=times, round_time_s=round_time,
+                           energy_left_j=self.energy_left.copy())

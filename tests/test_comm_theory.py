@@ -2,7 +2,6 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
 from repro.configs.registry import get_arch
@@ -26,8 +25,7 @@ def test_cnn_comm_model_paper_inequality():
     assert big.phsfl_wins(kappa0=5)
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(1, 20))
+@pytest.mark.parametrize("k0", list(range(1, 21)))
 def test_comm_monotone_in_kappa0(k0):
     cm = comm_for_cnn(CNN_CFG, dataset_size=500)
     assert cm.phi_phsfl_bits(k0 + 1) > cm.phi_phsfl_bits(k0)

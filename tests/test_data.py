@@ -1,15 +1,22 @@
 """Data pipeline: Dirichlet partitioner (property-based) + synthetic sets."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.data import dirichlet_partition, make_federated_image_data
 from repro.data.loader import ClientLoader, batch_iterator
 from repro.data.synthetic import make_image_dataset, synthetic_token_batch
 
+# seeded stand-in for hypothesis: 20 (num_clients, alpha, seed) draws
+_DRAW = np.random.default_rng(1234)
+_PARTITION_CASES = [
+    (int(_DRAW.integers(2, 21)), float(_DRAW.uniform(0.05, 10.0)),
+     int(_DRAW.integers(0, 10 ** 6)))
+    for _ in range(20)
+]
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(2, 20), st.floats(0.05, 10.0), st.integers(0, 10 ** 6))
+
+@pytest.mark.parametrize("num_clients,alpha,seed", _PARTITION_CASES)
 def test_dirichlet_partition_conserves_samples(num_clients, alpha, seed):
     rng = np.random.default_rng(seed)
     labels = rng.integers(0, 10, size=500)
@@ -18,6 +25,30 @@ def test_dirichlet_partition_conserves_samples(num_clients, alpha, seed):
     assert len(all_idx) == len(labels)
     assert len(np.unique(all_idx)) == len(labels)   # each exactly once
     assert all(len(p) >= 2 for p in parts)
+
+
+@pytest.mark.parametrize("seed", list(range(8)))
+def test_dirichlet_topup_extreme_skew(seed):
+    """Regression: at alpha=0.05 with many clients the retry loop exhausts
+    and the top-up fallback runs; it must never pick a starved client as its
+    own donor (which used to loop forever / move samples nowhere) and must
+    still conserve samples while satisfying min_per_client."""
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 10, size=300)
+    parts = dirichlet_partition(labels, 40, alpha=0.05, seed=seed)
+    assert sum(len(p) for p in parts) == len(labels)
+    all_idx = np.concatenate(parts)
+    assert len(np.unique(all_idx)) == len(labels)
+    assert all(len(p) >= 2 for p in parts)
+
+
+def test_dirichlet_topup_infeasible_raises():
+    """Regression: with fewer samples than num_clients * min_per_client the
+    old fallback silently drained already-topped-up clients and returned a
+    partition full of empty clients; now it raises."""
+    labels = np.random.default_rng(0).integers(0, 10, size=30)
+    with pytest.raises(ValueError):
+        dirichlet_partition(labels, 40, alpha=0.05, seed=0)
 
 
 def test_dirichlet_skew_increases_with_small_alpha():

@@ -27,7 +27,7 @@ shapes = [ShapeConfig("t", 128, 16, "train"),
 for arch in ["gemma3-12b", "olmoe-1b-7b", "recurrentgemma-2b"]:
     cfg = get_arch(arch).reduced()
     for sh in shapes:
-        with jax.set_mesh(mesh):
+        with mesh:
             b = build_step(cfg, sh, mesh)
             compiled = jax.jit(b.fn).lower(*b.args).compile()
             txt = compiled.as_text()

@@ -10,9 +10,12 @@ from repro.sharding.rules import params_specs, spec_for
 
 
 def _mesh(multi=False):
-    if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"))
-    return AbstractMesh((16, 16), ("data", "model"))
+    sizes = (2, 16, 16) if multi else (16, 16)
+    names = ("pod", "data", "model") if multi else ("data", "model")
+    try:
+        return AbstractMesh(sizes, names)            # jax >= 0.5 signature
+    except TypeError:
+        return AbstractMesh(tuple(zip(names, sizes)))  # 0.4.x: (name, size)
 
 
 def test_spec_for_basic_rules():

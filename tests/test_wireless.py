@@ -1,0 +1,209 @@
+"""Wireless channel, participation scheduler, and masked-aggregation
+integration: the ideal-network trajectory must be reproduced bit-for-bit
+under a full participation mask, and partial masks must renormalize."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (HierarchyConfig, TrainConfig, WirelessConfig)
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.core.fedsim import FedSim
+from repro.data.synthetic import make_federated_image_data
+from repro.wireless import (ChannelModel, ParticipationScheduler, RoundBits,
+                            client_round_bits, make_scheduler)
+from repro.wireless.channel import LinkState
+
+
+BITS = RoundBits(uplink=10_000_000, downlink=10_000_000)
+
+
+def _chan(**kw):
+    return ChannelModel(WirelessConfig(**kw), num_clients=8)
+
+
+# ----------------------------------------------------------- channel -------
+def test_ideal_channel_is_free():
+    ch = _chan(model="ideal")
+    link = ch.sample(0)
+    t = ch.round_time_s(link, BITS)
+    assert (t == 0).all()
+    assert (ch.round_energy_j(link, BITS) == 0).all()
+
+
+def test_static_channel_deterministic_and_correct():
+    ch = _chan(model="static", mean_uplink_mbps=10.0, mean_downlink_mbps=40.0,
+               latency_s=0.01)
+    l0, l1 = ch.sample(0), ch.sample(7)
+    np.testing.assert_array_equal(l0.uplink_bps, l1.uplink_bps)
+    t = ch.round_time_s(l0, BITS)
+    # 2*10ms latency + 10Mb/10Mbps + 10Mb/40Mbps = 0.02 + 1.0 + 0.25
+    np.testing.assert_allclose(t, 1.27, rtol=1e-6)
+    e = ch.round_energy_j(l0, BITS)
+    np.testing.assert_allclose(e, 0.5 * 1.0, rtol=1e-6)   # P_tx * airtime
+
+
+def test_rayleigh_fades_per_round_not_per_client_scale():
+    ch = _chan(model="rayleigh", seed=3)
+    t0 = ch.round_time_s(ch.sample(0), BITS)
+    t1 = ch.round_time_s(ch.sample(1), BITS)
+    assert not np.allclose(t0, t1)          # fading varies round to round
+    assert (t0 > 0).all() and np.isfinite(t0).all()
+
+
+def test_heterogeneity_gives_persistent_fast_and_slow_clients():
+    ch = _chan(model="static", heterogeneity=1.0, seed=0)
+    t = ch.round_time_s(ch.sample(0), BITS)
+    assert t.min() < t.max() / 2            # clearly heterogeneous
+    t2 = ch.round_time_s(ch.sample(5), BITS)
+    np.testing.assert_array_equal(t, t2)    # but fixed over rounds
+
+
+def test_trace_channel_replays_rows():
+    tr = ((5.0,) * 8, (50.0,) * 8)
+    ch = _chan(model="trace", trace=tr, latency_s=0.0)
+    t0 = ch.round_time_s(ch.sample(0), BITS)
+    t1 = ch.round_time_s(ch.sample(1), BITS)
+    t2 = ch.round_time_s(ch.sample(2), BITS)   # cycles back to row 0
+    assert (t0 > t1).all()
+    np.testing.assert_array_equal(t0, t2)
+
+
+def test_client_round_bits_accounting():
+    from repro.core.comm import comm_for_cnn
+    comm = comm_for_cnn(CNN_CFG, dataset_size=100)
+    bits = client_round_bits(comm, kappa0=3)
+    nb = comm.batches_per_epoch
+    assert bits.uplink == (3 * nb * (comm.phi_activation_bits()
+                                     + comm.phi_indices_bits())
+                           + comm.phi_off_bits())
+    assert bits.downlink == 3 * nb * comm.phi_activation_bits() \
+        + comm.phi_off_bits()
+    # uplink ships the minibatch indices too, so it is strictly bigger
+    assert bits.uplink > bits.downlink
+
+
+# --------------------------------------------------------- scheduler -------
+def _sched(**kw):
+    cfg = WirelessConfig(model="static", mean_uplink_mbps=10.0,
+                         mean_downlink_mbps=40.0, latency_s=0.0,
+                         heterogeneity=1.0, **kw)
+    return ParticipationScheduler(cfg, ChannelModel(cfg, 8), BITS)
+
+
+def test_deadline_drops_stragglers():
+    s = _sched(deadline_s=1.0)
+    rep = s.step(0)
+    assert 0 < rep.num_participants < 8     # heterogeneity: some miss 1.0s
+    times = s.channel.round_time_s(s.channel.sample(0), BITS)
+    np.testing.assert_array_equal(rep.mask, (times <= 1.0).astype(np.float64))
+    assert rep.round_time_s == 1.0          # ES waited out the deadline
+
+
+def test_topk_keeps_fastest():
+    s = _sched(selection="topk", topk=3)
+    rep = s.step(0)
+    assert rep.num_participants == 3
+    picked = np.flatnonzero(rep.mask)
+    assert set(picked) == set(np.argsort(rep.times_s)[:3])
+
+
+def test_unscheduled_clients_cost_no_waiting():
+    """Regression: clients dropped by the SCHEDULER (top-k) — not by the
+    deadline — must not inflate the simulated round time to the deadline;
+    the ES only waits for clients it scheduled."""
+    s = _sched(selection="topk", topk=3, deadline_s=10.0)
+    rep = s.step(0)
+    assert rep.num_participants == 3
+    assert rep.round_time_s == rep.times_s[rep.mask > 0].max()
+    assert rep.round_time_s < 10.0
+
+
+def test_random_selection_thins():
+    s = _sched(selection="random", participation_prob=0.5)
+    counts = [s.step(r).num_participants for r in range(40)]
+    assert 0.2 < np.mean(counts) / 8 < 0.8
+
+
+def test_energy_budget_gates_participation():
+    # static homogeneous channel: every participating round costs the same,
+    # so once the budget is below one round's cost the dropout is permanent
+    cfg = WirelessConfig(model="static", mean_uplink_mbps=10.0,
+                         mean_downlink_mbps=40.0, latency_s=0.0,
+                         energy_budget_j=1.2, tx_power_w=0.5)
+    s = ParticipationScheduler(cfg, ChannelModel(cfg, 4), BITS)
+    # one round costs 0.5 W * 1 s = 0.5 J -> budget 1.2 J allows 2 rounds
+    parts = [s.step(r).num_participants for r in range(4)]
+    assert parts == [4, 4, 0, 0]
+    assert (s.energy_left >= 0).all()
+
+
+# ------------------------------------- fedsim + mask integration -----------
+@pytest.fixture(scope="module")
+def small_fed():
+    return make_federated_image_data(4, alpha=0.5, train_per_class=20,
+                                     test_per_class=10, seed=0)
+
+
+def _fedsim(fed, wireless=None, seed=0):
+    h = HierarchyConfig(num_edge_servers=2, clients_per_es=2, kappa0=1,
+                        kappa1=2, global_rounds=2)
+    t = TrainConfig(learning_rate=0.05, batch_size=8, freeze_head=True)
+    return FedSim(CNN_CFG, fed, h, t, batches_per_epoch=1, seed=seed,
+                  wireless=wireless)
+
+
+def test_full_participation_bit_identical_to_ideal(small_fed):
+    """Acceptance regression: a wireless scenario whose mask is all-ones on
+    every edge round reproduces the pre-wireless trajectory bit-for-bit."""
+    res_ideal = _fedsim(small_fed).run(rounds=2, log_every=1)
+    # static channel, no deadline, no energy cap => everyone participates
+    w = WirelessConfig(model="static", deadline_s=float("inf"))
+    sim = _fedsim(small_fed, wireless=w)
+    assert sim.scheduler is not None
+    res_w = sim.run(rounds=2, log_every=1)
+    assert all(n["participants"] == 4 for n in res_w.network)
+    for a, b in zip(jax.tree.leaves(res_ideal.global_params),
+                    jax.tree.leaves(res_w.global_params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for ra, rb in zip(res_ideal.history, res_w.history):
+        assert ra["train_loss"] == rb["train_loss"]
+        assert ra["test_loss"] == rb["test_loss"]
+
+
+def test_zero_participation_freezes_models(small_fed):
+    """Impossible deadline: nobody ever participates, so every edge round
+    keeps the previous edge model and training goes nowhere."""
+    w = WirelessConfig(model="static", mean_uplink_mbps=0.001,
+                       deadline_s=0.01)
+    sim = _fedsim(small_fed, wireless=w)
+    res = sim.run(rounds=1, log_every=1)
+    assert all(n["participants"] == 0 for n in res.network)
+    import jax.random
+    from repro.models import cnn
+    p0 = cnn.init(jax.random.PRNGKey(0), CNN_CFG)
+    for a, b in zip(jax.tree.leaves(res.global_params), jax.tree.leaves(p0)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_partial_participation_trains_and_logs(small_fed):
+    w = WirelessConfig(model="rayleigh", mean_uplink_mbps=2.0,
+                       mean_downlink_mbps=8.0, deadline_s=3.0, seed=1)
+    sim = _fedsim(small_fed, wireless=w)
+    res = sim.run(rounds=2, log_every=1)
+    parts = [n["participants"] for n in res.network]
+    assert len(parts) == 4                  # kappa1=2 edge rounds x 2 rounds
+    assert min(parts) < 4                   # someone dropped at least once
+    assert res.total_sim_time_s > 0
+    assert "mean_participants" in res.history[-1]
+    assert np.isfinite(res.history[-1]["test_loss"])
+    # training still moved: someone participated, so params left the init
+    import jax.random
+    from repro.models import cnn
+    p0 = cnn.init(jax.random.PRNGKey(0), CNN_CFG)
+    moved = any(not np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree.leaves(res.global_params),
+                                jax.tree.leaves(p0)))
+    assert moved
