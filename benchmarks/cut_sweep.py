@@ -1,0 +1,114 @@
+"""Cut-policy x channel sweep: adaptive cut selection vs fixed cuts.
+
+Runs the faithful CNN simulator (FedSim) under per-ES shared uplinks and an
+edge-round deadline, once per (cut policy, channel model) cell, and emits a
+JSON table.  The fixed policies pin every client to one candidate cut
+(conv1 / conv2 / fc1 — the Remark-2 invariant choices that only move bits);
+``greedy`` picks each client's fastest affordable cut per round and
+``deadline`` the deepest cut that still makes the deadline at the contended
+rate (ASFL-style).  The table shows the adaptive policies matching or
+beating the participation rate of the worst fixed cut at the same deadline
+— the acceptance bar of ISSUE 2 — while fixed cuts pay whichever bits their
+frozen split costs.
+
+    PYTHONPATH=src python benchmarks/cut_sweep.py \
+        [--channels static rayleigh] [--deadline 4.0] [--rounds 2] \
+        [--out cut_sweep.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs.base import HierarchyConfig, TrainConfig, WirelessConfig
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.core.fedsim import FedSim
+from repro.data.synthetic import make_federated_image_data
+from repro.models.cnn import CUT_CANDIDATES
+
+
+def run_one(fed, policy: str, channel: str, *, deadline: float, rounds: int,
+            es_uplink_mbps: float, seed: int) -> dict:
+    """One sweep cell.  ``policy`` is "greedy", "deadline", or "fixed:<cut>"."""
+    h = HierarchyConfig(num_edge_servers=2, clients_per_es=4, kappa0=2,
+                        kappa1=2, global_rounds=rounds)
+    t = TrainConfig(learning_rate=0.05, batch_size=16, freeze_head=True)
+    fixed_cut = None
+    if policy.startswith("fixed:"):
+        fixed_cut = policy.split(":", 1)[1]
+        cut_policy, candidates = "fixed", (fixed_cut,)
+    else:
+        cut_policy, candidates = policy, CUT_CANDIDATES
+    wireless = WirelessConfig(model=channel, mean_uplink_mbps=20.0,
+                              mean_downlink_mbps=80.0, latency_s=0.02,
+                              deadline_s=deadline,
+                              es_uplink_mbps=es_uplink_mbps,
+                              cut_policy=cut_policy,
+                              cut_candidates=candidates, seed=seed)
+    sim = FedSim(CNN_CFG, fed, h, t, batches_per_epoch=2, seed=seed,
+                 wireless=wireless, cut=fixed_cut)
+    res = sim.run(rounds=rounds, log_every=rounds)
+    parts = [n["participants"] for n in res.network] or [h.num_clients]
+    times = [n["round_time_s"] for n in res.network] or [0.0]
+    cuts = [n["mean_cut"] for n in res.network if "mean_cut" in n]
+    return {
+        "policy": policy,
+        "channel": channel,
+        "deadline_s": deadline,
+        "final_loss": res.history[-1]["test_loss"],
+        "final_acc": res.history[-1]["test_acc"],
+        "participation_rate": float(np.mean(parts)) / h.num_clients,
+        "mean_round_time_s": float(np.mean(times)),
+        "mean_cut": float(np.mean(cuts)) if cuts else 0.0,
+        "total_sim_time_s": res.total_sim_time_s,
+    }
+
+
+def sweep(fed, channels, *, deadline: float, rounds: int,
+          es_uplink_mbps: float, seed: int) -> list[dict]:
+    policies = [f"fixed:{c}" for c in CUT_CANDIDATES] + ["greedy", "deadline"]
+    return [run_one(fed, p, ch, deadline=deadline, rounds=rounds,
+                    es_uplink_mbps=es_uplink_mbps, seed=seed)
+            for ch in channels for p in policies]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--channels", nargs="+", default=["static", "rayleigh"],
+                    choices=["static", "rayleigh"])
+    ap.add_argument("--deadline", type=float, default=4.0)
+    ap.add_argument("--es-uplink-mbps", type=float, default=40.0)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--alpha", type=float, default=0.3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args(argv)
+
+    fed = make_federated_image_data(8, alpha=args.alpha, train_per_class=40,
+                                    test_per_class=20, seed=args.seed)
+    table = sweep(fed, args.channels, deadline=args.deadline,
+                  rounds=args.rounds, es_uplink_mbps=args.es_uplink_mbps,
+                  seed=args.seed)
+    print(json.dumps(table, indent=2))
+    # the ISSUE-2 acceptance bar, checked per channel
+    for ch in args.channels:
+        rows = [r for r in table if r["channel"] == ch]
+        worst_fixed = min(r["participation_rate"] for r in rows
+                          if r["policy"].startswith("fixed:"))
+        for pol in ("greedy", "deadline"):
+            got = next(r["participation_rate"] for r in rows
+                       if r["policy"] == pol)
+            flag = "OK " if got >= worst_fixed else "FAIL"
+            print(f"[{flag}] {ch}/{pol}: participation {got:.3f} >= "
+                  f"worst fixed {worst_fixed:.3f}")
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(table, f, indent=2)
+    return table
+
+
+if __name__ == "__main__":
+    main()

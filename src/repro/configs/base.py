@@ -250,6 +250,15 @@ class WirelessConfig:
     heterogeneity: float = 0.0       # lognormal sigma of a FIXED per-client
     #                                  rate scale (0 -> homogeneous clients)
     trace: tuple[tuple[float, ...], ...] = ()  # (round, client) uplink Mbps
+    # ---- per-ES shared uplink (contention) ----
+    es_uplink_mbps: float = float("inf")  # shared ES uplink capacity, split
+    #                                  evenly among that round's scheduled
+    #                                  clients (inf -> private uplinks)
+    # ---- adaptive cut-layer selection (repro.wireless.cutter) ----
+    cut_policy: str = "fixed"        # fixed | greedy | deadline
+    cut_candidates: tuple = ()       # candidate cuts, shallow -> deep: CNN
+    #                                  cut names or LM client depths; () ->
+    #                                  the model's single default cut
     # ---- participation policy (scheduler) ----
     deadline_s: float = float("inf")  # edge-round deadline; stragglers drop
     selection: str = "deadline"      # deadline | topk | random

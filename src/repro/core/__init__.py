@@ -20,7 +20,8 @@ from repro.core.phsfl import (make_phsfl_round, make_host_round,
 from repro.core.personalize import (personalize_head_bank, personalized_eval,
                                     merge_head, extract_head, head_loss)
 from repro.core.fedsim import FedSim, centralized_sgd, split_grad, monolithic_grad
-from repro.core.comm import CommModel, comm_for_cnn, comm_for_lm
+from repro.core.comm import (CommModel, comm_for_cnn, comm_for_lm,
+                             comm_table_for_cnn, comm_table_for_lm)
 from repro.core.theory import BoundInputs, bound_terms, lr_limit, uniform_weights
 
 __all__ = [
@@ -38,5 +39,6 @@ __all__ = [
     "extract_head", "head_loss",
     "FedSim", "centralized_sgd", "split_grad", "monolithic_grad",
     "CommModel", "comm_for_cnn", "comm_for_lm",
+    "comm_table_for_cnn", "comm_table_for_lm",
     "BoundInputs", "bound_terms", "lr_limit", "uniform_weights",
 ]

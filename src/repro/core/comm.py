@@ -62,18 +62,20 @@ class CommModel:
 
 
 def comm_for_cnn(cfg, dataset_size: int, *, omega: int = 32,
-                 batch_size: int = 32, batches_per_epoch: int = 5) -> CommModel:
-    """Instantiate the comm model from the paper's CNN split."""
+                 batch_size: int = 32, batches_per_epoch: int = 5,
+                 cut: str | None = None) -> CommModel:
+    """Instantiate the comm model from the paper's CNN split at ``cut``."""
     import jax
     import numpy as np
 
     from repro.core.split import count_parts, split_spec_for
     from repro.models import cnn as cnn_mod
 
+    cut = cut if cut is not None else cnn_mod.DEFAULT_CUT
     params = jax.eval_shape(
         lambda k: cnn_mod.init(k, cfg), jax.random.PRNGKey(0))
-    counts = count_parts(params, split_spec_for(cfg))
-    z_c = cnn_mod.cut_activation_size(cfg, 1)
+    counts = count_parts(params, split_spec_for(cfg, cut))
+    z_c = cnn_mod.cut_activation_size(cfg, 1, cut)
     return CommModel(omega=omega, batch_size=batch_size,
                      batches_per_epoch=batches_per_epoch, cut_size=z_c,
                      client_params=counts["client"],
@@ -82,13 +84,21 @@ def comm_for_cnn(cfg, dataset_size: int, *, omega: int = 32,
 
 
 def comm_for_lm(cfg, seq_len: int, dataset_size: int, *, omega: int = 16,
-                batch_size: int = 8, batches_per_epoch: int = 1) -> CommModel:
-    """Comm model for an LM architecture (cut after n_client_layers)."""
+                batch_size: int = 8, batches_per_epoch: int = 1,
+                cut: int | None = None) -> CommModel:
+    """Comm model for an LM architecture (cut after ``cut`` blocks, default
+    ``cfg.n_client_layers``).  The config is rebuilt at the requested cut so
+    the lead (unscanned) stage always covers the client block and the
+    Z_0 count is exact for any candidate depth."""
+    import dataclasses
+
     import jax
 
     from repro.core.split import count_parts, split_spec_for
     from repro.models import build_model
 
+    if cut is not None and cut != cfg.n_client_layers:
+        cfg = dataclasses.replace(cfg, n_client_layers=int(cut))
     model = build_model(cfg)
     params = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
     counts = count_parts(params, split_spec_for(cfg))
@@ -98,3 +108,21 @@ def comm_for_lm(cfg, seq_len: int, dataset_size: int, *, omega: int = 16,
                      client_params=counts["client"],
                      total_params=sum(counts.values()),
                      dataset_size=dataset_size)
+
+
+def comm_table_for_cnn(cfg, dataset_size: int, *,
+                       cuts: tuple[str, ...] | None = None,
+                       **kw) -> dict[str, CommModel]:
+    """Per-cut ``(Z_0, Z_c)`` table over the CNN's candidate cuts, shallow to
+    deep — the byte side of the ASFL-style cut-selection knob."""
+    from repro.models import cnn as cnn_mod
+
+    cuts = cuts if cuts else cnn_mod.CUT_CANDIDATES
+    return {c: comm_for_cnn(cfg, dataset_size, cut=c, **kw) for c in cuts}
+
+
+def comm_table_for_lm(cfg, seq_len: int, dataset_size: int, *,
+                      cuts: tuple[int, ...], **kw) -> dict[int, CommModel]:
+    """Per-cut table over candidate ``n_client_layers`` depths for an LM."""
+    return {int(c): comm_for_lm(cfg, seq_len, dataset_size, cut=int(c), **kw)
+            for c in cuts}

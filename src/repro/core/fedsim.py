@@ -37,18 +37,24 @@ from repro.models import cnn
 
 
 # ---------------------------------------------------------------------------
-def split_grad(params, x, y):
-    """Literal split-learning gradient exchange (Steps 3.2–3.8)."""
-    client_p = {"conv1": params["conv1"]}
-    server_p = {"conv2": params["conv2"], "fc1": params["fc1"],
-                "fc2": params["fc2"]}
+def split_grad(params, x, y, cut: str = cnn.DEFAULT_CUT):
+    """Literal split-learning gradient exchange (Steps 3.2–3.8) at ``cut``.
+
+    Remark 2 in code: the VJP composition through ANY cut point replays the
+    same chain rule, so the returned gradients are bit-identical across all
+    candidate cuts (and to monolithic backprop up to float re-association —
+    see test_split.py / test_cutter.py)."""
+    client_keys = cnn.client_keys_for(cut)
+    client_p = {k: params[k] for k in client_keys}
+    server_p = {k: params[k] for k in params if k not in client_keys}
 
     # Step 3.2: client forward to the cut layer
-    o_fp, client_vjp = jax.vjp(lambda cp: cnn.client_forward(cp, x), client_p)
+    o_fp, client_vjp = jax.vjp(
+        lambda cp: cnn.client_forward(cp, x, cut), client_p)
 
     # Steps 3.5–3.6: server forward + server-side backprop
     def server_loss(sp, o):
-        logits = cnn.server_forward(sp, o)
+        logits = cnn.server_forward(sp, o, cut)
         logp = jax.nn.log_softmax(logits)
         return -jnp.take_along_axis(logp, y[:, None], axis=1).mean()
 
@@ -83,24 +89,48 @@ class FedSim:
     def __init__(self, cfg: CNNConfig, data: FederatedImageData,
                  hcfg: HierarchyConfig, tcfg: TrainConfig, *,
                  batches_per_epoch: int = 5, seed: int = 0,
-                 wireless: WirelessConfig | None = None):
+                 wireless: WirelessConfig | None = None,
+                 cut: str | None = None):
         assert data.num_clients == hcfg.num_clients
         self.cfg, self.data, self.h, self.t = cfg, data, hcfg, tcfg
         self.batches_per_epoch = batches_per_epoch
+        # the TRAINING cut: which boundary split_grad exchanges activations
+        # at.  Remark 2 guarantees the trajectory is invariant to it (the
+        # invariance test pins this down bit-for-bit); the wireless side
+        # prices it per round via the cut controller.
+        self.cut = cut if cut is not None else cnn.DEFAULT_CUT
+        if self.cut not in cnn.CUT_CANDIDATES:
+            raise ValueError(f"unknown cut {self.cut!r}")
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
 
         # wireless scenario: channel + participation (None => ideal network)
         self.scheduler = None
         if wireless is not None and wireless.model != "ideal":
-            from repro.core.comm import comm_for_cnn
+            from repro.core.comm import comm_for_cnn, comm_table_for_cnn
             from repro.wireless import make_scheduler
             mean_size = int(np.mean([len(i) for i in data.train_indices]))
-            comm = comm_for_cnn(cfg, dataset_size=max(mean_size, 2),
-                                batch_size=tcfg.batch_size,
-                                batches_per_epoch=batches_per_epoch)
-            self.scheduler = make_scheduler(wireless, hcfg.num_clients,
-                                            comm, hcfg.kappa0)
+            es_assign = np.arange(hcfg.num_clients) // hcfg.clients_per_es
+            kw = dict(dataset_size=max(mean_size, 2),
+                      batch_size=tcfg.batch_size,
+                      batches_per_epoch=batches_per_epoch)
+            if wireless.cut_policy != "fixed" or wireless.cut_candidates:
+                table = comm_table_for_cnn(
+                    cfg, cuts=tuple(wireless.cut_candidates) or None, **kw)
+                if wireless.cut_policy == "fixed" and self.cut not in table:
+                    raise ValueError(
+                        f"cut_policy='fixed' would price one of "
+                        f"{tuple(table)} but the training cut is "
+                        f"{self.cut!r}; add it to cut_candidates")
+                self.scheduler = make_scheduler(
+                    wireless, hcfg.num_clients, kappa0=hcfg.kappa0,
+                    comm_table=table, es_assign=es_assign,
+                    fixed_cut=self.cut if self.cut in table else 0)
+            else:
+                comm = comm_for_cnn(cfg, cut=self.cut, **kw)
+                self.scheduler = make_scheduler(wireless, hcfg.num_clients,
+                                                comm, hcfg.kappa0,
+                                                es_assign=es_assign)
         self._edge_round = 0
 
         U, B = hcfg.num_clients, hcfg.num_edge_servers
@@ -120,9 +150,10 @@ class FedSim:
     def _build_steps(self):
         tcfg = self.t
         freeze = tcfg.freeze_head
+        cut = self.cut
 
         def sgd_update(params, x, y):
-            loss, g = split_grad(params, x, y)
+            loss, g = split_grad(params, x, y, cut)
             lr = tcfg.learning_rate
 
             def upd(path_is_head, p, gg):
@@ -285,10 +316,14 @@ class FedSim:
                     es_any |= (rep.mask.reshape(self.B, self.Ub) > 0).any(1)
                     parts.append(rep.num_participants)
                     res.total_sim_time_s += rep.round_time_s
-                    res.network.append({
-                        "edge_round": rep.round_idx,
-                        "participants": rep.num_participants,
-                        "round_time_s": rep.round_time_s})
+                    row = {"edge_round": rep.round_idx,
+                           "participants": rep.num_participants,
+                           "round_time_s": rep.round_time_s}
+                    if rep.cuts is not None:
+                        sel = rep.scheduled if rep.scheduled.any() \
+                            else np.ones(self.U, bool)
+                        row["mean_cut"] = float(rep.cuts[sel].mean())
+                    res.network.append(row)
                     stacked = self._edge_aggregate(stacked, mask=rep.mask,
                                                    fallback=prev)
             if sched is None:

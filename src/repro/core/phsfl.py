@@ -101,9 +101,14 @@ def _local_scan(model: Model, tcfg: TrainConfig, opt):
     return scan
 
 
-def build_optimizer(model: Model, tcfg: TrainConfig):
-    """Masked optimizer implementing the PHSFL frozen head (Eq. 12)."""
-    spec = split_spec_for(model.cfg)
+def build_optimizer(model: Model, tcfg: TrainConfig, cut=None):
+    """Masked optimizer implementing the PHSFL frozen head (Eq. 12).
+
+    ``cut`` re-partitions the client/body boundary (see ``split_spec_for``);
+    the head — the only part the optimizer mask distinguishes — is the same
+    at every cut, which is exactly the paper's Remark 2: the round numerics
+    cannot depend on the cut, only the comm accounting does."""
+    spec = split_spec_for(model.cfg, cut)
     phase = GLOBAL_TRAIN if tcfg.freeze_head else HSFL_TRAIN
     shapes = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
     mask = trainable_mask(shapes, spec, phase)
@@ -124,7 +129,7 @@ class PHSFLRound:
 
 def make_phsfl_round(model: Model, hcfg: HierarchyConfig, tcfg: TrainConfig,
                      mesh: Mesh, *, global_sync: bool,
-                     participation: bool = False) -> PHSFLRound:
+                     participation: bool = False, cut=None) -> PHSFLRound:
     """One compiled edge round.
 
     With ``participation=True`` the returned fn takes a sixth argument: a
@@ -132,9 +137,14 @@ def make_phsfl_round(model: Model, hcfg: HierarchyConfig, tcfg: TrainConfig,
     weights renormalize over the participating clients (Eqs. 14-16 over the
     survivors); an ES with zero participants keeps its pre-round edge model.
     An all-ones mask is bit-identical to the unmasked round.
+
+    ``cut`` declares the client/body split boundary (for LMs, the client
+    depth).  By Remark 2 it cannot change the round's numerics — the
+    compiled fn is identical for every cut — but it keeps the declared
+    split in sync with the wireless cut controller's byte accounting.
     """
     cfg = model.cfg
-    opt, _ = build_optimizer(model, tcfg)
+    opt, _ = build_optimizer(model, tcfg, cut)
     ca = _client_axes(mesh)
     manual = set(data_axes(mesh))
     num_clients = 1
@@ -202,7 +212,7 @@ def make_phsfl_round(model: Model, hcfg: HierarchyConfig, tcfg: TrainConfig,
 # --------------------------------------------- host mirror (single device) --
 def make_host_round(model: Model, hcfg: HierarchyConfig, tcfg: TrainConfig,
                     *, num_clients: int, global_sync: bool,
-                    participation: bool = False) -> PHSFLRound:
+                    participation: bool = False, cut=None) -> PHSFLRound:
     """Mesh-free mirror of :func:`make_phsfl_round` for single-device runs.
 
     Same semantics, same numerics: vmapped clients run the identical local
@@ -212,8 +222,10 @@ def make_host_round(model: Model, hcfg: HierarchyConfig, tcfg: TrainConfig,
     test can compare the two bit-for-bit at f32.  Optimizer states stay
     per-client, matching the mesh path.  ``hcfg.num_edge_servers`` groups
     the leading client dim; alpha_u must be normalized within each group.
+    ``cut`` declares the split boundary exactly as in make_phsfl_round
+    (a Remark-2 no-op on numerics).
     """
-    opt, _ = build_optimizer(model, tcfg)
+    opt, _ = build_optimizer(model, tcfg, cut)
     B = hcfg.num_edge_servers
     assert num_clients % B == 0, (num_clients, B)
     Ub = num_clients // B

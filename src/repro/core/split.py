@@ -45,15 +45,25 @@ class SplitSpec:
         return "body"
 
 
-def split_spec_for(cfg) -> SplitSpec:
-    """Build the SplitSpec for a model config."""
+def split_spec_for(cfg, cut=None) -> SplitSpec:
+    """Build the SplitSpec for a model config.
+
+    ``cut`` selects which candidate boundary the client/body split falls on:
+    a cut NAME from ``cnn.CUT_CANDIDATES`` for the CNN, or an int overriding
+    ``cfg.n_client_layers`` for LMs.  ``None`` keeps the config's default.
+    By the paper's Remark 2 the choice never changes learning dynamics —
+    only the Remark-1 byte accounting (core/comm.py) and the wireless cut
+    controller (repro.wireless.cutter) care.
+    """
     if isinstance(cfg, CNNConfig):
         from repro.models import cnn
+        keys = cnn.client_keys_for(cut if cut is not None else cnn.DEFAULT_CUT)
         return SplitSpec(
-            client_patterns=tuple(f"^{k}(/|$)" for k in cnn.CLIENT_KEYS),
+            client_patterns=tuple(f"^{k}(/|$)" for k in keys),
             head_patterns=tuple(f"^{k}(/|$)" for k in cnn.HEAD_KEYS),
         )
     assert isinstance(cfg, ModelConfig)
+    n_client = cfg.n_client_layers if cut is None else int(cut)
     if cfg.encdec is not None:
         # client side = the modality frontend projection + token embedding
         return SplitSpec(
@@ -65,9 +75,9 @@ def split_spec_for(cfg) -> SplitSpec:
     from repro.models.transformer import compute_stages
     stages = compute_stages(cfg)
     client: list[str] = [r"^embed(/|$)"]
-    if cfg.n_client_layers and stages and stages[0].which == "lead":
+    if n_client and stages and stages[0].which == "lead":
         for j, lid in enumerate(stages[0].layer_ids):
-            if lid < cfg.n_client_layers:
+            if lid < n_client:
                 client.append(rf"^stage0/b{j}(/|$)")
     return SplitSpec(client_patterns=tuple(client),
                      head_patterns=(rf"^{cfg.head_name}(/|$)",))

@@ -29,7 +29,7 @@ from repro.configs.registry import get_arch
 from repro.core import (build_optimizer, init_stacked_params,
                         make_host_round, make_phsfl_round,
                         personalize_head_bank, personalized_eval)
-from repro.core.comm import comm_for_lm
+from repro.core.comm import comm_for_lm, comm_table_for_lm
 from repro.data.synthetic import synthetic_token_batch
 from repro.launch.mesh import set_mesh
 from repro.models import build_model
@@ -88,6 +88,16 @@ def main(argv=None):
                     help="mean per-client uplink rate")
     ap.add_argument("--energy-budget", type=float, default=float("inf"),
                     help="lifetime per-client uplink energy budget (J)")
+    ap.add_argument("--es-uplink-mbps", type=float, default=float("inf"),
+                    help="shared ES uplink capacity, split among that "
+                         "round's scheduled clients (inf = private uplinks)")
+    ap.add_argument("--cut-policy", default="fixed",
+                    choices=["fixed", "greedy", "deadline"],
+                    help="per-round cut-layer selection policy "
+                         "(repro.wireless.cutter)")
+    ap.add_argument("--cut-candidates", type=int, nargs="+", default=None,
+                    help="candidate client depths (n_client_layers), "
+                         "shallow to deep; default: the model's depth only")
     args = ap.parse_args(argv)
 
     log = MetricLogger("train")
@@ -116,31 +126,54 @@ def main(argv=None):
     # wireless scenario: channel + participation scheduler (None = ideal)
     scheduler = None
     if args.channel != "ideal":
+        candidates = tuple(args.cut_candidates or ())
         wcfg = WirelessConfig(model=args.channel,
                               mean_uplink_mbps=args.mean_rate_mbps,
                               mean_downlink_mbps=4 * args.mean_rate_mbps,
                               deadline_s=args.deadline,
                               energy_budget_j=args.energy_budget,
+                              es_uplink_mbps=args.es_uplink_mbps,
+                              cut_policy=args.cut_policy,
+                              cut_candidates=candidates,
                               seed=args.seed)
-        comm = comm_for_lm(cfg, seq_len=args.seq,
-                           dataset_size=args.rounds * args.local_steps *
-                           args.micro, batch_size=args.micro,
-                           batches_per_epoch=1)
-        scheduler = make_scheduler(wcfg, C, comm, hcfg.kappa0)
+        comm_kw = dict(seq_len=args.seq,
+                       dataset_size=args.rounds * args.local_steps *
+                       args.micro, batch_size=args.micro,
+                       batches_per_epoch=1)
+        es_assign = np.arange(C) // hcfg.clients_per_es
+        if wcfg.cut_policy != "fixed" or candidates:
+            table = comm_table_for_lm(
+                cfg, cuts=candidates or (cfg.n_client_layers,), **comm_kw)
+            if wcfg.cut_policy == "fixed" and cfg.n_client_layers not in table:
+                raise ValueError(
+                    f"--cut-policy fixed would price one of {tuple(table)} "
+                    f"but the model's client depth is {cfg.n_client_layers}; "
+                    f"include it in --cut-candidates")
+            scheduler = make_scheduler(
+                wcfg, C, kappa0=hcfg.kappa0, comm_table=table,
+                es_assign=es_assign,
+                fixed_cut=cfg.n_client_layers
+                if cfg.n_client_layers in table else 0)
+        else:
+            comm = comm_for_lm(cfg, **comm_kw)
+            scheduler = make_scheduler(wcfg, C, comm, hcfg.kappa0,
+                                       es_assign=es_assign)
     participation = scheduler is not None
 
     with set_mesh(mesh):
         if mesh.shape["data"] == C:
             round_ = make_phsfl_round(model, hcfg, tcfg, mesh,
                                       global_sync=False,
-                                      participation=participation)
+                                      participation=participation,
+                                      cut=cfg.n_client_layers)
         else:
             # degenerate 1-device path: the mesh-free mirror of
             # make_phsfl_round (same local scan, same weighted aggregation
             # in agg_dtype, same per-client optimizer states)
             round_ = make_host_round(model, hcfg, tcfg, num_clients=C,
                                      global_sync=False,
-                                     participation=participation)
+                                     participation=participation,
+                                     cut=cfg.n_client_layers)
         round_fn = jax.jit(round_.fn)
 
         params = init_stacked_params(model, jax.random.PRNGKey(args.seed),
@@ -164,11 +197,18 @@ def main(argv=None):
                 mask = jnp.asarray(rep.mask, jnp.float32)
                 params, opt_state, metrics = round_fn(
                     params, opt_state, batch, au, ab, mask)
+                extra = {}
+                if rep.cuts is not None:
+                    # cuts of clients that actually transmitted (entries of
+                    # unscheduled clients are hypothetical private-rate picks)
+                    sel = rep.scheduled if rep.scheduled.any() \
+                        else np.ones(C, bool)
+                    extra["mean_cut"] = float(rep.cuts[sel].mean())
                 log.log(step=r, loss=metrics["loss"],
                         participants=rep.num_participants,
                         round_time_s=rep.round_time_s,
                         sim_time_s=sim_time,
-                        s_per_round=(time.time() - t0) / (r + 1))
+                        s_per_round=(time.time() - t0) / (r + 1), **extra)
             else:
                 params, opt_state, metrics = round_fn(params, opt_state,
                                                       batch, au, ab)

@@ -1,9 +1,19 @@
 """The paper's CNN (Sec. V-A) with explicit split-learning dataflow.
 
+At the paper's default cut (after the first maxpool):
+
 Client-side model  w_{u,0}:  conv1 -> relu -> maxpool          (trained on client)
 Server-side body   w_{1,bd}: conv2 -> relu -> maxpool -> fc1 -> relu
 Server-side head   w_{1,hd}: fc2  (classifier — random-init, FROZEN in training,
                                    fine-tuned per client for personalization)
+
+The cut is a parameter: ``CUT_CANDIDATES`` names the layer boundaries the
+split may fall on (shallow to deep), and ``client_forward`` /
+``server_forward`` / ``cut_activation_size`` / ``client_keys_for`` all take
+a ``cut`` argument.  Remark 2 of the paper proves the choice does not change
+learning dynamics — it only moves the cut-layer tensor (Z_c) and the
+client-block size (Z_0), i.e. who pays which bits (Remark 1) — which is what
+makes the cut a pure resource-allocation knob (see repro.wireless.cutter).
 
 ``client_forward`` / ``server_forward`` mirror Steps 3.2–3.5: the client
 computes the cut-layer activations o_fp, offloads them (plus mini-batch
@@ -57,10 +67,21 @@ def axes(cfg: CNNConfig):
     }
 
 
-# PHSFL pytree partition (core/split.py builds masks from these)
+# PHSFL pytree partition (core/split.py builds masks from these).  The cut
+# candidates are the layer boundaries the split may fall on, shallow to deep;
+# DEFAULT_CUT is the paper's own split (after the first maxpool).
+CUT_CANDIDATES = ("conv1", "conv2", "fc1")
+DEFAULT_CUT = "conv1"
 CLIENT_KEYS = ("conv1",)
 BODY_KEYS = ("conv2", "fc1")
 HEAD_KEYS = ("fc2",)
+
+
+def client_keys_for(cut: str) -> tuple[str, ...]:
+    """Pytree keys of the client block w_{u,0} when cutting after ``cut``."""
+    if cut not in CUT_CANDIDATES:
+        raise ValueError(f"unknown cut {cut!r}; candidates: {CUT_CANDIDATES}")
+    return CUT_CANDIDATES[:CUT_CANDIDATES.index(cut) + 1]
 
 
 def _conv(p, x):
@@ -75,16 +96,26 @@ def _maxpool(x):
                                  (1, 2, 2, 1), "VALID")
 
 
-def client_forward(params, x):
-    """w_{u,0}: images (B,H,W,C) -> cut-layer activations o_fp."""
-    return _maxpool(jax.nn.relu(_conv(params["conv1"], x)))
-
-
-def server_forward(params, o_fp):
-    """w_{u,1} = [body; head]: cut activations -> logits."""
-    h = _maxpool(jax.nn.relu(_conv(params["conv2"], o_fp)))
+def client_forward(params, x, cut: str = DEFAULT_CUT):
+    """w_{u,0}: images (B,H,W,C) -> cut-layer activations o_fp at ``cut``."""
+    h = _maxpool(jax.nn.relu(_conv(params["conv1"], x)))
+    if cut == "conv1":
+        return h
+    h = _maxpool(jax.nn.relu(_conv(params["conv2"], h)))
+    if cut == "conv2":
+        return h
     h = h.reshape(h.shape[0], -1)
-    h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+    return jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
+
+
+def server_forward(params, o_fp, cut: str = DEFAULT_CUT):
+    """w_{u,1} = [body; head]: cut activations at ``cut`` -> logits."""
+    h = o_fp
+    if cut == "conv1":
+        h = _maxpool(jax.nn.relu(_conv(params["conv2"], h)))
+    if cut in ("conv1", "conv2"):
+        h = h.reshape(h.shape[0], -1)
+        h = jax.nn.relu(h @ params["fc1"]["w"] + params["fc1"]["b"])
     return h @ params["fc2"]["w"] + params["fc2"]["b"]
 
 
@@ -104,7 +135,15 @@ def loss_fn(params, x, y):
     return loss_and_acc(params, x, y)[0]
 
 
-def cut_activation_size(cfg: CNNConfig, batch: int) -> int:
-    """Elements of o_fp for one mini-batch (Remark 1: N x Z_c)."""
-    s = cfg.image_size // 2
-    return batch * s * s * cfg.conv1_filters
+def cut_activation_size(cfg: CNNConfig, batch: int,
+                        cut: str = DEFAULT_CUT) -> int:
+    """Elements of o_fp for one mini-batch (Remark 1: N x Z_c) at ``cut``."""
+    if cut == "conv1":
+        s = cfg.image_size // 2
+        return batch * s * s * cfg.conv1_filters
+    if cut == "conv2":
+        s = cfg.image_size // 4
+        return batch * s * s * cfg.conv2_filters
+    if cut == "fc1":
+        return batch * cfg.fc_hidden
+    raise ValueError(f"unknown cut {cut!r}; candidates: {CUT_CANDIDATES}")

@@ -5,7 +5,10 @@ client gets a per-edge-round uplink/downlink rate, latency, and energy
 budget; a scheduler drops stragglers against a deadline and emits a 0/1
 participation mask that the aggregation paths (``repro.core.fedsim``,
 ``repro.core.phsfl``) consume by renormalizing the Eq. 14-16 weights over
-the participating clients only.
+the participating clients only.  A per-round cut-layer controller
+(``repro.wireless.cutter``) exploits the paper's Remark 2 — the cut choice
+never changes learning dynamics, only who pays which bits (Remark 1) — to
+adapt the split point to channel state, ASFL-style.
 
 ``WirelessConfig`` knobs (``repro.configs.base``)
 =================================================
@@ -23,19 +26,39 @@ Channel (``repro.wireless.channel.ChannelModel``):
 - ``trace``: round-major tuple of per-client uplink-Mbps tuples (cycled
   over rounds, resized over clients); downlink scales by the configured
   downlink/uplink ratio.
+- ``es_uplink_mbps``: SHARED uplink capacity of each edge server.  The
+  scheduled clients of one ES split it evenly — each gets the smaller of
+  its private rate and its fair share, so the per-ES aggregate rate never
+  exceeds the capacity.  ``inf`` (default) keeps every uplink private;
+  an ideal channel bypasses contention entirely.
+
+Cut selection (``repro.wireless.cutter.CutController``):
+
+- ``cut_policy``: ``"fixed"`` (one declared cut — the pre-cutter behavior),
+  ``"greedy"`` (per client, the cut minimizing estimated round time subject
+  to the energy budget), ``"deadline"`` (the deepest affordable cut that
+  still makes ``deadline_s`` at the contended rate).
+- ``cut_candidates``: the candidate cuts, shallow to deep — CNN cut names
+  (``repro.models.cnn.CUT_CANDIDATES``) or LM client depths; ``()`` means
+  the model's single default cut.  ``repro.core.comm`` builds the per-cut
+  ``(Z_0, Z_c)`` byte table (``comm_table_for_cnn``/``comm_table_for_lm``)
+  the controller prices cuts with.
 
 Participation (``repro.wireless.scheduler.ParticipationScheduler``):
 
 - ``deadline_s``: edge-round deadline; a scheduled client whose simulated
   round time (2*latency + uplink airtime + downlink airtime for the
-  Remark-1 traffic of ``client_round_bits``) exceeds it is dropped from
-  that aggregation, and the ES waits the deadline out.
+  Remark-1 traffic of ``client_round_bits`` at its chosen cut) exceeds it
+  is dropped from that aggregation, and the ES waits the deadline out.
 - ``selection``: ``"deadline"`` (energy+deadline gates only), ``"topk"``
   (schedule only the ``topk`` fastest affordable clients), ``"random"``
   (thin schedulable clients i.i.d. with ``participation_prob``).
 - ``energy_budget_j`` / ``tx_power_w``: lifetime uplink energy budget and
   transmit power; budgets never recharge, and a client skips any round it
   cannot afford (under fading it may re-join a later, cheaper round).
+  Every client that TRANSMITS pays for its airtime — a deadline-missing
+  straggler is charged up to the deadline even though its update is
+  discarded.
 - ``seed``: RNG seed for fading draws, heterogeneity, and thinning.
 
 Aggregation semantics under a partial mask: participating clients keep
@@ -46,15 +69,34 @@ every path is bit-identical to the ideal-network simulator.
 
 from repro.wireless.channel import (ChannelModel, LinkState, RoundBits,
                                     client_round_bits)
+from repro.wireless.cutter import (CutController, CutSpec, cut_specs,
+                                   make_cut_controller)
 from repro.wireless.scheduler import ParticipationScheduler, RoundReport
 
 __all__ = [
     "ChannelModel", "LinkState", "RoundBits", "client_round_bits",
+    "CutController", "CutSpec", "cut_specs", "make_cut_controller",
     "ParticipationScheduler", "RoundReport", "make_scheduler",
 ]
 
 
-def make_scheduler(cfg, num_clients: int, comm, kappa0: int):
-    """Convenience: CommModel byte accounting -> channel -> scheduler."""
+def make_scheduler(cfg, num_clients: int, comm=None, kappa0: int = 1, *,
+                   comm_table=None, es_assign=None, fixed_cut=0):
+    """Convenience: CommModel byte accounting -> channel -> scheduler.
+
+    Pass either one ``comm`` (a single fixed cut, the original behavior) or
+    a ``comm_table`` — an ORDERED shallow-to-deep dict of cut -> CommModel
+    from ``comm_table_for_cnn``/``comm_table_for_lm`` — in which case a
+    :class:`CutController` with policy ``cfg.cut_policy`` prices the cuts
+    per round.  ``es_assign`` maps each client to its edge server for the
+    shared-uplink contention (default: all clients on one ES).
+    """
+    channel = ChannelModel(cfg, num_clients)
+    if comm_table is not None:
+        cutter = make_cut_controller(
+            comm_table, kappa0, policy=cfg.cut_policy, fixed_cut=fixed_cut,
+            deadline_s=cfg.deadline_s, tx_power_w=cfg.tx_power_w)
+        return ParticipationScheduler(cfg, channel, cutter=cutter,
+                                      es_assign=es_assign)
     bits = client_round_bits(comm, kappa0)
-    return ParticipationScheduler(cfg, ChannelModel(cfg, num_clients), bits)
+    return ParticipationScheduler(cfg, channel, bits, es_assign=es_assign)

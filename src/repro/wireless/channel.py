@@ -39,9 +39,12 @@ class LinkState:
 
 @dataclass(frozen=True)
 class RoundBits:
-    """Bits each client moves in one edge round (split-learning dataflow)."""
-    uplink: int
-    downlink: int
+    """Bits each client moves in one edge round (split-learning dataflow).
+
+    Scalar for a shared fixed cut, or per-client ``(U,)`` arrays when a
+    :class:`repro.wireless.cutter.CutController` picks per-client cuts."""
+    uplink: int | np.ndarray
+    downlink: int | np.ndarray
 
 
 def client_round_bits(comm: CommModel, kappa0: int) -> RoundBits:
@@ -97,6 +100,28 @@ class ChannelModel:
         up = np.maximum(up_mean * self._scale * fade, 1.0)
         down = np.maximum(down_mean * self._scale * fade, 1.0)
         return LinkState(up, down, np.full(U, cfg.latency_s))
+
+    # -------------------------------------------------------- contention --
+    def contended_uplink(self, link: LinkState, active: np.ndarray,
+                         es_assign: np.ndarray) -> np.ndarray:
+        """Effective uplink rates when each ES's uplink is a SHARED pipe.
+
+        The ``active`` (scheduled) clients of one ES split its capacity
+        ``es_uplink_mbps`` evenly; each client gets the smaller of its own
+        link rate and its fair share, so the per-ES aggregate never exceeds
+        the ES capacity.  Inactive clients keep their private rate (they do
+        not transmit, so they occupy no share).  An ideal channel or an
+        infinite ES capacity bypasses contention entirely.
+        """
+        cap = self.cfg.es_uplink_mbps * 1e6
+        if self.cfg.model == "ideal" or not np.isfinite(cap):
+            return link.uplink_bps
+        active = np.asarray(active, bool)
+        es = np.asarray(es_assign, int)
+        counts = np.bincount(es[active], minlength=es.max() + 1)
+        share = cap / np.maximum(counts[es], 1)
+        return np.where(active, np.minimum(link.uplink_bps, share),
+                        link.uplink_bps)
 
     # ------------------------------------------------------ time / energy --
     def round_time_s(self, link: LinkState, bits: RoundBits) -> np.ndarray:

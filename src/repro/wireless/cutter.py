@@ -1,0 +1,153 @@
+"""Per-round, channel-aware cut-layer selection (ASFL-style).
+
+The paper's Remark 2 proves the cut-layer choice does not change learning
+dynamics; Remark 1 shows it changes who pays which bits — the cut trades the
+per-minibatch activation tensor (N * Z_c, shrinking as the cut deepens in
+the CNN) against the client-block offload (Z_0, growing with depth).  That
+makes the cut a pure resource-allocation knob, and this module is the
+controller that turns per-round channel state into a per-client cut choice:
+
+- ``fixed``:    every client always uses one declared cut (the pre-cutter
+                behavior, now just the degenerate policy);
+- ``greedy``:   per client, the cut with the smallest ESTIMATED round time
+                whose uplink energy the client can still afford (per-client
+                argmin of time subject to the energy budget);
+- ``deadline``: per client, the DEEPEST affordable cut that still makes the
+                edge-round deadline at the offered rate — deeper cuts ship
+                fewer activation bits per minibatch but a bigger client
+                block, so under a tight deadline the controller walks down
+                exactly as far as the channel allows.
+
+The controller is stateless: :class:`~repro.wireless.scheduler.
+ParticipationScheduler` calls :meth:`CutController.decide` twice per round —
+once on the private (uncontended) rates to make scheduling decisions, and
+again on the contended per-ES rates so ``deadline``/``greedy`` adapt to the
+bandwidth actually available after the ES uplink is shared.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.comm import CommModel
+from repro.wireless.channel import RoundBits, client_round_bits
+
+POLICIES = ("fixed", "greedy", "deadline")
+
+
+@dataclass(frozen=True)
+class CutSpec:
+    """One candidate cut: its name and its Remark-1 byte accounting."""
+    name: str | int          # "conv1" (CNN) or n_client_layers (LM)
+    bits: RoundBits          # per-edge-round traffic at this cut
+    z0: int                  # Z_0: client-block parameters
+    z_c: int                 # Z_c: cut-layer activation elements per sample
+
+
+def cut_specs(comms: dict, kappa0: int) -> tuple[CutSpec, ...]:
+    """Build the candidate list from a per-cut CommModel table (the output
+    of ``comm_table_for_cnn`` / ``comm_table_for_lm``), preserving its
+    shallow-to-deep order."""
+    specs = []
+    for name, cm in comms.items():
+        assert isinstance(cm, CommModel)
+        specs.append(CutSpec(name=name, bits=client_round_bits(cm, kappa0),
+                             z0=cm.client_params, z_c=cm.cut_size))
+    return tuple(specs)
+
+
+class CutController:
+    """Maps per-client link state to a per-client candidate-cut index."""
+
+    def __init__(self, specs: tuple[CutSpec, ...], policy: str = "fixed", *,
+                 fixed_cut: int = 0, deadline_s: float = float("inf"),
+                 tx_power_w: float = 0.5):
+        if policy not in POLICIES:
+            raise ValueError(f"unknown cut policy {policy!r}; one of {POLICIES}")
+        if not specs:
+            raise ValueError("need at least one candidate cut")
+        if not 0 <= fixed_cut < len(specs):
+            raise ValueError(f"fixed_cut {fixed_cut} out of range for "
+                             f"{len(specs)} candidates")
+        self.specs = tuple(specs)
+        self.policy = policy
+        self.fixed_cut = fixed_cut
+        self.deadline_s = deadline_s
+        self.tx_power_w = tx_power_w
+        self.up_bits = np.array([s.bits.uplink for s in specs], np.float64)
+        self.down_bits = np.array([s.bits.downlink for s in specs], np.float64)
+
+    @property
+    def num_cuts(self) -> int:
+        return len(self.specs)
+
+    def bits_for(self, cuts: np.ndarray) -> RoundBits:
+        """Per-client (uplink, downlink) bit arrays for a cut-index vector."""
+        cuts = np.asarray(cuts, int)
+        return RoundBits(uplink=self.up_bits[cuts],
+                         downlink=self.down_bits[cuts])
+
+    # ------------------------------------------------------------ policy --
+    def _estimates(self, up_bps, down_bps, latency_s):
+        """(num_cuts, U) estimated round time and uplink energy matrices."""
+        with np.errstate(divide="ignore", invalid="ignore"):
+            t_up = self.up_bits[:, None] / up_bps[None, :]
+            t_down = self.down_bits[:, None] / down_bps[None, :]
+        t_up = np.nan_to_num(t_up, nan=0.0)        # inf rate: 0 airtime
+        t_down = np.nan_to_num(t_down, nan=0.0)
+        times = 2 * np.asarray(latency_s)[None, :] + t_up + t_down
+        energy = self.tx_power_w * t_up
+        return times, energy
+
+    def decide(self, up_bps, down_bps, latency_s, energy_left) -> np.ndarray:
+        """Per-client candidate index under the configured policy.
+
+        All policies fall back in two stages when their primary criterion is
+        infeasible: an unaffordable/deadline-missing client first takes the
+        fastest affordable cut, and a client that can afford NO cut takes
+        the one with the least uplink energy (it will then be dropped by the
+        scheduler's energy gate — the choice only has to be sane, not
+        feasible).
+        """
+        U = np.asarray(up_bps).shape[0]
+        if self.policy == "fixed" or self.num_cuts == 1:
+            return np.full(U, self.fixed_cut, int)
+        times, energy = self._estimates(np.asarray(up_bps, float),
+                                        np.asarray(down_bps, float),
+                                        np.broadcast_to(
+                                            np.asarray(latency_s, float), (U,)))
+        affordable = energy <= np.asarray(energy_left, float)[None, :]
+        t_aff = np.where(affordable, times, np.inf)
+        fastest_aff = np.argmin(t_aff, axis=0)     # greedy's primary answer
+        cheapest = np.argmin(energy, axis=0)       # last-resort fallback
+        none_affordable = ~affordable.any(axis=0)
+        if self.policy == "greedy":
+            return np.where(none_affordable, cheapest, fastest_aff)
+        # deadline: deepest affordable cut meeting the deadline (candidates
+        # are ordered shallow -> deep, so the highest feasible index wins)
+        feasible = affordable & (times <= self.deadline_s)
+        idx = np.arange(self.num_cuts)[:, None]
+        deepest = np.where(feasible, idx, -1).max(axis=0)
+        out = np.where(deepest >= 0, deepest, fastest_aff)
+        return np.where(none_affordable, cheapest, out).astype(int)
+
+
+def make_cut_controller(comms: dict, kappa0: int, *, policy: str = "fixed",
+                        fixed_cut: int | str = 0,
+                        deadline_s: float = float("inf"),
+                        tx_power_w: float = 0.5) -> CutController:
+    """Convenience: per-cut CommModel table -> controller.
+
+    ``fixed_cut`` may be a candidate NAME (e.g. ``"conv1"``, or an LM depth —
+    name matches win over index interpretation) instead of an index.
+    """
+    specs = cut_specs(comms, kappa0)
+    names = [s.name for s in specs]
+    if fixed_cut in names:
+        fixed_cut = names.index(fixed_cut)
+    elif not (isinstance(fixed_cut, int) and 0 <= fixed_cut < len(specs)):
+        raise ValueError(f"fixed_cut {fixed_cut!r} not among {names}")
+    return CutController(specs, policy, fixed_cut=fixed_cut,
+                         deadline_s=deadline_s, tx_power_w=tx_power_w)

@@ -14,6 +14,23 @@ participation mask per edge round:
    time (channel latency + uplink + downlink airtime for this round's
    traffic) is within ``deadline_s`` (straggler dropout).
 
+Two optional refinements sit between gates 2 and 3:
+
+- **cut selection** (``cutter``): a :class:`repro.wireless.cutter.
+  CutController` picks a per-client cut each round, making the traffic
+  (and therefore times, energies, and the deadline outcome) cut-indexed;
+- **per-ES contention** (``es_uplink_mbps`` finite): the scheduled clients
+  of one ES split its uplink capacity evenly, so times/energies are
+  recomputed at the contended rates, adaptive cut policies re-decide, and
+  clients the contended price makes unaffordable withdraw (they never
+  transmit, cost nothing, and make nobody wait — a conservative single
+  pass: the capacity they would have used is not re-shared this round).
+
+Energy accounting: every client that TRANSMITS pays for the airtime it
+actually burns — a scheduled client that misses the deadline transmitted
+until the deadline cut it off, so it pays P_tx * min(uplink airtime,
+deadline) even though its update is discarded.
+
 The simulated edge-round wall clock is the slowest scheduled client's time
 when every scheduled client made the deadline, else the full deadline (the
 ES waits it out).  Clients the scheduler never scheduled (energy, top-k,
@@ -27,7 +44,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.configs.base import WirelessConfig
-from repro.wireless.channel import ChannelModel, RoundBits
+from repro.wireless.channel import ChannelModel, LinkState, RoundBits
 
 
 @dataclass
@@ -38,6 +55,9 @@ class RoundReport:
     times_s: np.ndarray        # (U,) per-client completion time
     round_time_s: float        # simulated wall clock of this edge round
     energy_left_j: np.ndarray  # (U,) remaining budgets AFTER this round
+    scheduled: np.ndarray = None   # (U,) bool: transmitted this round
+    cuts: np.ndarray = None        # (U,) int cut indices (None: fixed bits)
+    uplink_bps: np.ndarray = None  # (U,) effective (contended) uplink rates
 
     @property
     def num_participants(self) -> int:
@@ -48,21 +68,39 @@ class ParticipationScheduler:
     """Stateful per-edge-round participation decisions for U clients."""
 
     def __init__(self, cfg: WirelessConfig, channel: ChannelModel,
-                 bits: RoundBits):
+                 bits: RoundBits | None = None, *, cutter=None,
+                 es_assign: np.ndarray | None = None):
         if cfg.selection not in ("deadline", "topk", "random"):
             raise ValueError(f"unknown selection policy {cfg.selection!r}")
+        if (bits is None) == (cutter is None):
+            raise ValueError("pass exactly one of bits= or cutter=")
         self.cfg = cfg
         self.channel = channel
         self.bits = bits
+        self.cutter = cutter
         self.U = channel.U
+        # ES attachment for the shared-uplink contention; default: one pool
+        self.es_assign = (np.zeros(self.U, int) if es_assign is None
+                          else np.asarray(es_assign, int))
+        assert self.es_assign.shape == (self.U,)
         self.energy_left = np.full(self.U, cfg.energy_budget_j)
         self._rng = np.random.default_rng(cfg.seed + 1)
+
+    def _bits_cuts(self, up_bps, down_bps, latency_s):
+        """Cut decision (or the fixed bits) at the given rates."""
+        if self.cutter is None:
+            return self.bits, None
+        cuts = self.cutter.decide(up_bps, down_bps, latency_s,
+                                  self.energy_left)
+        return self.cutter.bits_for(cuts), cuts
 
     def step(self, round_idx: int) -> RoundReport:
         cfg = self.cfg
         link = self.channel.sample(round_idx)
-        times = self.channel.round_time_s(link, self.bits)
-        energy = self.channel.round_energy_j(link, self.bits)
+        bits, cuts = self._bits_cuts(link.uplink_bps, link.downlink_bps,
+                                     link.latency_s)
+        times = self.channel.round_time_s(link, bits)
+        energy = self.channel.round_energy_j(link, bits)
 
         scheduled = self.energy_left >= energy           # gate 1: energy
         if cfg.selection == "topk" and cfg.topk > 0:     # gate 2a: k fastest
@@ -72,10 +110,36 @@ class ParticipationScheduler:
             scheduled &= keep
         elif cfg.selection == "random" and cfg.participation_prob < 1.0:
             scheduled &= self._rng.random(self.U) < cfg.participation_prob
+
+        # ---- per-ES uplink contention among the scheduled clients ----
+        eff_up = self.channel.contended_uplink(link, scheduled,
+                                               self.es_assign)
+        if eff_up is not link.uplink_bps:
+            link = LinkState(eff_up, link.downlink_bps, link.latency_s)
+            if self.cutter is not None and self.cutter.policy != "fixed":
+                # adaptive policies re-decide at the rate actually available
+                bits2, cuts2 = self._bits_cuts(eff_up, link.downlink_bps,
+                                               link.latency_s)
+                cuts = np.where(scheduled, cuts2, cuts)
+                bits = self.cutter.bits_for(cuts)
+            times = self.channel.round_time_s(link, bits)
+            energy = self.channel.round_energy_j(link, bits)
+            # the contended price can only be higher; a client that can no
+            # longer afford it withdraws before transmitting
+            scheduled &= self.energy_left >= energy
+
         alive = scheduled & (times <= cfg.deadline_s)    # gate 3: deadline
 
-        self.energy_left = np.where(alive, self.energy_left - energy,
-                                    self.energy_left)
+        # every transmitting client burns airtime, capped at the deadline
+        # for stragglers (their transmission is cut off, but the energy is
+        # spent); the energy gate above guarantees the charge is affordable
+        with np.errstate(divide="ignore"):
+            t_up = np.asarray(bits.uplink, float) / link.uplink_bps
+        burn = np.minimum(np.where(np.isfinite(t_up), t_up, 0.0),
+                          cfg.deadline_s)
+        self.energy_left = np.where(
+            scheduled, self.energy_left - cfg.tx_power_w * burn,
+            self.energy_left)
 
         if not alive.any():
             # a scheduled-but-straggling client still makes the ES wait
@@ -89,4 +153,6 @@ class ParticipationScheduler:
             round_time = float(t) if np.isfinite(t) else 0.0
         return RoundReport(round_idx=round_idx, mask=alive.astype(np.float64),
                            times_s=times, round_time_s=round_time,
-                           energy_left_j=self.energy_left.copy())
+                           energy_left_j=self.energy_left.copy(),
+                           scheduled=scheduled.copy(), cuts=cuts,
+                           uplink_bps=np.asarray(link.uplink_bps).copy())

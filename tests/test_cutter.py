@@ -1,0 +1,391 @@
+"""Adaptive cut-layer selection + per-ES uplink contention (ISSUE 2).
+
+Three layers of lock-down:
+
+1. the parameterized split itself — every candidate cut composes to the
+   same forward, and split-learning gradients are BIT-identical across
+   cuts (Remark 2 at the op level: the VJP composition replays the same
+   chain rule wherever the cut falls);
+2. the controller + scheduler — policy behavior, the contended per-ES
+   uplink, the energy accounting, and the seeded invariants
+   (mask ⊆ scheduled, monotone energy, capacity cap, free ideal channel);
+3. the system — FedSim's full training trajectory is bit-identical across
+   all candidate cuts under an ideal channel while the Remark-1 bits and
+   the simulated round times differ (the tentpole's primary acceptance
+   test), and the adaptive policies keep at least the participation of the
+   worst fixed cut in the cut-sweep benchmark.
+"""
+
+import importlib.util
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HierarchyConfig, TrainConfig, WirelessConfig
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.core.comm import comm_for_cnn, comm_table_for_cnn
+from repro.core.fedsim import FedSim, split_grad
+from repro.data.synthetic import make_federated_image_data
+from repro.models import cnn
+from repro.wireless import (ChannelModel, CutController, ParticipationScheduler,
+                            RoundBits, client_round_bits, cut_specs,
+                            make_cut_controller, make_scheduler)
+
+
+# ------------------------------------------------- parameterized split -----
+@pytest.mark.parametrize("cut", cnn.CUT_CANDIDATES)
+def test_client_server_compose_to_apply(cut):
+    rng = np.random.default_rng(0)
+    params = cnn.init(jax.random.PRNGKey(1), CNN_CFG)
+    x = jnp.asarray(rng.normal(size=(4, 32, 32, 3)).astype(np.float32))
+    o_fp = cnn.client_forward(params, x, cut)
+    logits = cnn.server_forward(params, o_fp, cut)
+    np.testing.assert_array_equal(np.asarray(logits),
+                                  np.asarray(cnn.apply(params, x)))
+    # the o_fp shape is exactly what the comm accounting charges for
+    assert int(np.prod(o_fp.shape)) == cnn.cut_activation_size(CNN_CFG,
+                                                               x.shape[0], cut)
+
+
+def test_client_keys_nest_with_depth():
+    keys = [cnn.client_keys_for(c) for c in cnn.CUT_CANDIDATES]
+    for shallow, deep in zip(keys, keys[1:]):
+        assert set(shallow) < set(deep)
+    assert cnn.client_keys_for(cnn.DEFAULT_CUT) == cnn.CLIENT_KEYS
+    with pytest.raises(ValueError):
+        cnn.client_keys_for("fc2")
+
+
+def test_split_grad_bit_identical_across_cuts():
+    """Remark 2 at the gradient level: the cut-layer dataflow returns the
+    SAME bits for every cut, not merely close ones."""
+    rng = np.random.default_rng(0)
+    params = cnn.init(jax.random.PRNGKey(1), CNN_CFG)
+    x = jnp.asarray(rng.normal(size=(16, 32, 32, 3)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=16).astype(np.int32))
+    f = jax.jit(split_grad, static_argnames="cut")
+    ref_loss, ref_g = f(params, x, y, cut=cnn.CUT_CANDIDATES[0])
+    for cut in cnn.CUT_CANDIDATES[1:]:
+        loss, g = f(params, x, y, cut=cut)
+        assert np.asarray(loss) == np.asarray(ref_loss)
+        for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(ref_g)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ------------------------------------------------------- byte accounting ---
+def test_cut_table_trades_activations_for_offload():
+    table = comm_table_for_cnn(CNN_CFG, dataset_size=400)
+    z0 = [cm.client_params for cm in table.values()]
+    zc = [cm.cut_size for cm in table.values()]
+    assert z0 == sorted(z0) and z0[0] < z0[-1]      # deeper cut: bigger w_0
+    assert zc == sorted(zc, reverse=True) and zc[0] > zc[-1]  # smaller o_fp
+    phi = [cm.phi_phsfl_bits(kappa0=2) for cm in table.values()]
+    assert len(set(phi)) == len(phi)                # every cut pays its own
+    # single-cut comm_for_cnn agrees with the table entry
+    one = comm_for_cnn(CNN_CFG, dataset_size=400, cut="conv2")
+    assert one == table["conv2"]
+
+
+def test_client_round_bits_cut_indexed():
+    table = comm_table_for_cnn(CNN_CFG, dataset_size=400)
+    specs = cut_specs(table, kappa0=2)
+    assert tuple(s.name for s in specs) == cnn.CUT_CANDIDATES
+    for s, cm in zip(specs, table.values()):
+        assert s.bits == client_round_bits(cm, 2)
+        assert (s.z0, s.z_c) == (cm.client_params, cm.cut_size)
+
+
+# ------------------------------------------------------------ controller ---
+def _controller(policy, deadline=float("inf"), kappa0=2):
+    table = comm_table_for_cnn(CNN_CFG, dataset_size=400, batch_size=16,
+                               batches_per_epoch=2)
+    return make_cut_controller(table, kappa0, policy=policy,
+                               deadline_s=deadline, tx_power_w=0.5)
+
+
+def test_fixed_policy_and_named_fixed_cut():
+    ctl = _controller("fixed")
+    up = np.full(4, 1e6)
+    cuts = ctl.decide(up, 4 * up, 0.0, np.full(4, np.inf))
+    np.testing.assert_array_equal(cuts, np.zeros(4, int))
+    table = comm_table_for_cnn(CNN_CFG, dataset_size=400)
+    ctl2 = make_cut_controller(table, 2, policy="fixed", fixed_cut="fc1")
+    assert ctl2.fixed_cut == 2
+    with pytest.raises(ValueError):
+        make_cut_controller(table, 2, policy="fixed", fixed_cut="nope")
+    with pytest.raises(ValueError):
+        make_cut_controller(table, 2, policy="warp")
+
+
+def test_greedy_picks_min_time_cut():
+    ctl = _controller("greedy")
+    up = np.full(3, 10e6)                    # 10 Mbps
+    cuts = ctl.decide(up, 4 * up, 0.0, np.full(3, np.inf))
+    # unconstrained greedy = global argmin of estimated time
+    times, _ = ctl._estimates(up, 4 * up, np.zeros(3))
+    np.testing.assert_array_equal(cuts, times.argmin(axis=0))
+
+
+def test_greedy_respects_energy_budget():
+    ctl = _controller("greedy")
+    up = np.full(2, 10e6)
+    _, energy = ctl._estimates(up, 4 * up, np.zeros(2))
+    best = energy.argmin(axis=0)[0]
+    # a budget below every cut's cost falls back to the cheapest-energy cut
+    cuts = ctl.decide(up, 4 * up, 0.0, np.full(2, energy.min() * 0.5))
+    np.testing.assert_array_equal(cuts, [best, best])
+    # a budget that only affords the cheapest cut picks it too
+    cuts = ctl.decide(up, 4 * up, 0.0, np.full(2, energy.min() * 1.01))
+    np.testing.assert_array_equal(cuts, [best, best])
+
+
+def test_deadline_policy_walks_deeper_as_rate_drops():
+    """At a generous rate every cut makes the deadline -> deepest wins; as
+    the rate drops only cheaper cuts fit; when nothing fits -> fastest."""
+    ctl = _controller("deadline", deadline=4.0)
+    times, _ = ctl._estimates(np.array([100e6, 100e6]), np.array([400e6, 400e6]),
+                              np.zeros(2))
+    assert (times <= 4.0).all()
+    cuts = ctl.decide(np.array([100e6]), np.array([400e6]), 0.0,
+                      np.array([np.inf]))
+    assert cuts[0] == ctl.num_cuts - 1              # deepest affordable
+    # 7 Mbps: fc1's 72 Mb uplink blows the deadline, conv2's 19.8 Mb fits
+    cuts = ctl.decide(np.array([7e6]), np.array([28e6]), 0.0,
+                      np.array([np.inf]))
+    assert ctl.specs[cuts[0]].name == "conv2"
+    # 0.1 Mbps: nothing makes the deadline -> fastest (still conv2: fewest bits)
+    cuts = ctl.decide(np.array([0.1e6]), np.array([0.4e6]), 0.0,
+                      np.array([np.inf]))
+    assert ctl.specs[cuts[0]].name == "conv2"
+
+
+# ------------------------------------------------------------ contention ---
+def test_contended_uplink_splits_es_capacity():
+    cfg = WirelessConfig(model="static", mean_uplink_mbps=10.0,
+                         es_uplink_mbps=20.0)
+    ch = ChannelModel(cfg, num_clients=8)
+    link = ch.sample(0)
+    es = np.arange(8) // 4
+    active = np.ones(8, bool)
+    eff = ch.contended_uplink(link, active, es)
+    # 4 actives/ES share 20 Mbps -> 5 Mbps each (below the 10 Mbps private)
+    np.testing.assert_allclose(eff, 5e6)
+    # only one active in ES 0: its share is the full pipe, capped by private
+    active = np.zeros(8, bool)
+    active[0] = True
+    eff = ch.contended_uplink(link, active, es)
+    assert eff[0] == 10e6                       # min(private, 20 Mbps)
+    np.testing.assert_allclose(eff[1:], 10e6)   # inactives keep private rate
+
+
+def test_contention_bypassed_for_ideal_and_infinite_capacity():
+    for kw in (dict(model="ideal", es_uplink_mbps=20.0),
+               dict(model="static", es_uplink_mbps=float("inf"))):
+        ch = ChannelModel(WirelessConfig(**kw), num_clients=4)
+        link = ch.sample(0)
+        eff = ch.contended_uplink(link, np.ones(4, bool), np.zeros(4, int))
+        assert eff is link.uplink_bps
+
+
+# ---------------------------------------------------- scheduler + energy ---
+BITS = RoundBits(uplink=10_000_000, downlink=10_000_000)
+
+
+def test_scheduler_requires_exactly_one_traffic_source():
+    cfg = WirelessConfig(model="static")
+    ch = ChannelModel(cfg, 4)
+    with pytest.raises(ValueError):
+        ParticipationScheduler(cfg, ch)
+    with pytest.raises(ValueError):
+        ParticipationScheduler(cfg, ch, BITS, cutter=_controller("fixed"))
+
+
+def test_straggler_pays_for_burned_airtime():
+    """Regression (ISSUE 2 satellite): a scheduled client that misses the
+    deadline transmitted until the deadline cut it off — it must pay
+    P_tx * min(uplink airtime, deadline), not zero."""
+    cfg = WirelessConfig(model="static", mean_uplink_mbps=10.0,
+                         mean_downlink_mbps=40.0, latency_s=0.0,
+                         heterogeneity=1.5, deadline_s=1.0,
+                         energy_budget_j=100.0, tx_power_w=0.5, seed=0)
+    s = ParticipationScheduler(cfg, ChannelModel(cfg, 8), BITS)
+    rep = s.step(0)
+    dead = (rep.scheduled) & (rep.mask == 0)
+    assert dead.any(), "setup must produce scheduled stragglers"
+    t_up = BITS.uplink / rep.uplink_bps
+    expect = 100.0 - 0.5 * np.minimum(t_up, 1.0)
+    # every scheduled client paid for its airtime, stragglers included
+    np.testing.assert_allclose(rep.energy_left_j[rep.scheduled],
+                               expect[rep.scheduled])
+    assert (rep.energy_left_j[dead] < 100.0).all()
+    # unscheduled clients pay nothing
+    unsched = ~rep.scheduled
+    if unsched.any():
+        np.testing.assert_array_equal(rep.energy_left_j[unsched], 100.0)
+
+
+def test_contention_prices_out_unaffordable_clients_before_tx():
+    """A client that could afford the PRIVATE rate but not the contended one
+    withdraws without transmitting: no energy spent, no ES waiting."""
+    # private: 10 Mbps -> 0.5 J per round; contended 4-way on 10 Mbps
+    # -> 2.5 Mbps -> 2.0 J per round
+    cfg = WirelessConfig(model="static", mean_uplink_mbps=10.0,
+                         mean_downlink_mbps=40.0, latency_s=0.0,
+                         es_uplink_mbps=10.0, energy_budget_j=1.0,
+                         tx_power_w=0.5, seed=0)
+    s = ParticipationScheduler(cfg, ChannelModel(cfg, 4), BITS)
+    rep = s.step(0)
+    assert not rep.scheduled.any()
+    assert rep.num_participants == 0
+    assert rep.round_time_s == 0.0
+    np.testing.assert_array_equal(rep.energy_left_j, 1.0)
+
+
+# ------------------------------------------------- seeded invariants -------
+@pytest.mark.parametrize("seed", range(4))
+@pytest.mark.parametrize("scenario", ["rayleigh-deadline", "rayleigh-topk",
+                                      "static-random", "rayleigh-cutter"])
+def test_scheduler_invariants(seed, scenario):
+    model, selection = ("static", "random") \
+        if scenario == "static-random" else ("rayleigh",
+                                             scenario.split("-")[1])
+    cfg = WirelessConfig(model=model, mean_uplink_mbps=15.0,
+                         mean_downlink_mbps=60.0, latency_s=0.01,
+                         heterogeneity=0.7, deadline_s=3.0,
+                         selection=selection if selection != "cutter"
+                         else "deadline",
+                         topk=5 if selection == "topk" else 0,
+                         participation_prob=0.6,
+                         es_uplink_mbps=30.0, energy_budget_j=20.0,
+                         tx_power_w=0.5,
+                         cut_policy="deadline" if selection == "cutter"
+                         else "fixed",
+                         cut_candidates=cnn.CUT_CANDIDATES
+                         if selection == "cutter" else (),
+                         seed=seed)
+    es_assign = np.arange(8) // 4
+    if selection == "cutter":
+        table = comm_table_for_cnn(CNN_CFG, dataset_size=400, batch_size=16,
+                                   batches_per_epoch=2)
+        s = make_scheduler(cfg, 8, kappa0=2, comm_table=table,
+                           es_assign=es_assign)
+    else:
+        comm = comm_for_cnn(CNN_CFG, dataset_size=400, batch_size=16,
+                            batches_per_epoch=2)
+        s = make_scheduler(cfg, 8, comm, 2, es_assign=es_assign)
+    prev_energy = s.energy_left.copy()
+    cap_bps = cfg.es_uplink_mbps * 1e6
+    for r in range(6):
+        rep = s.step(r)
+        # participants are always a subset of the scheduled clients
+        assert ((rep.mask > 0) <= rep.scheduled).all()
+        # budgets never recharge
+        assert (rep.energy_left_j <= prev_energy + 1e-12).all()
+        prev_energy = rep.energy_left_j
+        # the shared ES uplink is never oversubscribed by transmitters
+        for b in range(2):
+            tx = rep.scheduled & (es_assign == b)
+            assert rep.uplink_bps[tx].sum() <= cap_bps * (1 + 1e-9)
+        if rep.cuts is not None:
+            assert ((rep.cuts >= 0) & (rep.cuts < 3)).all()
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_ideal_channel_full_participation_zero_time(seed):
+    cfg = WirelessConfig(model="ideal", es_uplink_mbps=5.0,
+                         deadline_s=0.5, energy_budget_j=1.0, seed=seed)
+    s = make_scheduler(cfg, 6, comm_for_cnn(CNN_CFG, dataset_size=400), 2)
+    for r in range(4):
+        rep = s.step(r)
+        np.testing.assert_array_equal(rep.mask, np.ones(6))
+        assert rep.round_time_s == 0.0
+        np.testing.assert_array_equal(rep.energy_left_j, 1.0)
+
+
+# ------------------------------------------ system-level Remark 2 ----------
+@pytest.fixture(scope="module")
+def small_fed():
+    return make_federated_image_data(8, alpha=0.4, train_per_class=20,
+                                     test_per_class=10, seed=0)
+
+
+def _run_fedsim(fed, cut, wireless=None):
+    h = HierarchyConfig(num_edge_servers=2, clients_per_es=4, kappa0=1,
+                        kappa1=2, global_rounds=2)
+    t = TrainConfig(learning_rate=0.05, batch_size=8, freeze_head=True)
+    sim = FedSim(CNN_CFG, fed, h, t, batches_per_epoch=1, seed=0,
+                 wireless=wireless, cut=cut)
+    return sim.run(rounds=2, log_every=1)
+
+
+def test_remark2_trajectory_invariant_but_bits_and_time_differ(small_fed):
+    """ISSUE 2 primary acceptance test.  For every candidate cut the FULL
+    FedSim trajectory — per-round train losses, test metrics, and the final
+    parameters — is bit-identical under an ideal channel (Remark 2: the cut
+    does not change learning dynamics), while the Remark-1 byte accounting
+    and the simulated wireless round time at that cut both change (Remark 1:
+    it changes who pays which bits)."""
+    runs = {c: _run_fedsim(small_fed, c) for c in cnn.CUT_CANDIDATES}
+    ref = runs[cnn.CUT_CANDIDATES[0]]
+    for c in cnn.CUT_CANDIDATES[1:]:
+        for ra, rb in zip(ref.history, runs[c].history):
+            assert ra["train_loss"] == rb["train_loss"], c
+            assert ra["test_loss"] == rb["test_loss"], c
+            assert ra["test_acc"] == rb["test_acc"], c
+        for a, b in zip(jax.tree.leaves(ref.global_params),
+                        jax.tree.leaves(runs[c].global_params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    # ...while the bits and the simulated round time are cut-dependent
+    table = comm_table_for_cnn(CNN_CFG, dataset_size=200, batch_size=8,
+                               batches_per_epoch=1)
+    phi = {c: cm.phi_phsfl_bits(kappa0=1) for c, cm in table.items()}
+    assert len(set(phi.values())) == len(phi)
+    times = {}
+    for c in cnn.CUT_CANDIDATES:
+        w = WirelessConfig(model="static", mean_uplink_mbps=10.0,
+                           mean_downlink_mbps=40.0, latency_s=0.0,
+                           cut_policy="fixed", cut_candidates=(c,))
+        res = _run_fedsim(small_fed, c, wireless=w)
+        times[c] = res.total_sim_time_s
+    assert len(set(times.values())) == len(times)
+    assert all(t > 0 for t in times.values())
+
+
+def test_fixed_policy_rejects_mismatched_training_cut(small_fed):
+    """A fixed cut policy must price the cut the simulation actually
+    trains/declares — a silent fallback would report bits/times/energies
+    for a different split than the one in the logs."""
+    h = HierarchyConfig(num_edge_servers=2, clients_per_es=4, kappa0=1,
+                        kappa1=1, global_rounds=1)
+    t = TrainConfig(learning_rate=0.05, batch_size=8, freeze_head=True)
+    w = WirelessConfig(model="static", cut_policy="fixed",
+                       cut_candidates=("conv1", "conv2"))
+    with pytest.raises(ValueError, match="cut_candidates"):
+        FedSim(CNN_CFG, small_fed, h, t, batches_per_epoch=1, seed=0,
+               wireless=w, cut="fc1")
+
+
+def test_cut_sweep_adaptive_beats_worst_fixed(small_fed):
+    """The benchmark's acceptance bar at test scale: greedy and deadline
+    policies keep at least the participation rate of the WORST fixed cut
+    at the same deadline.  One fading channel here (the static case is
+    pinned down by the unit-level policy/contention tests above); the full
+    policy x channel table is benchmarks/cut_sweep.py."""
+    spec = importlib.util.spec_from_file_location(
+        "cut_sweep", pathlib.Path(__file__).parent.parent / "benchmarks" /
+        "cut_sweep.py")
+    cut_sweep = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(cut_sweep)
+    table = cut_sweep.sweep(small_fed, ["rayleigh"], deadline=4.0,
+                            rounds=1, es_uplink_mbps=40.0, seed=0)
+    worst_fixed = min(r["participation_rate"] for r in table
+                      if r["policy"].startswith("fixed:"))
+    for pol in ("greedy", "deadline"):
+        got = next(r["participation_rate"] for r in table
+                   if r["policy"] == pol)
+        assert got >= worst_fixed, (pol, got, worst_fixed)

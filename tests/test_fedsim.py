@@ -67,8 +67,13 @@ def test_personalization_improves_per_client_accuracy(fed_data):
 
 @pytest.mark.slow
 def test_centralized_genie_upper_bound(fed_data):
+    """Recalibrated (ISSUE 2): the fixture pools only 400 train images, so
+    SGD at lr=0.05/batch=32 needs ~120 steps to fit the synthetic task —
+    3 epochs (36 steps) stalled at acc 0.21, 10 epochs reaches ~1.0.  The
+    assert keeps a wide margin below that so the test checks "the genie
+    learns the task", not a brittle point estimate."""
     t = TrainConfig(learning_rate=0.05, batch_size=32)
-    _, metrics = centralized_sgd(CNN_CFG, fed_data, t, epochs=3, seed=0)
+    _, metrics = centralized_sgd(CNN_CFG, fed_data, t, epochs=10, seed=0)
     assert metrics["acc"] > 0.5
 
 
