@@ -23,8 +23,8 @@ import json
 
 import numpy as np
 
-from repro.configs.base import HierarchyConfig, TrainConfig, WirelessConfig
 from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.configs.sweeps import sweep_hierarchy, sweep_train, sweep_wireless
 from repro.core.fedsim import FedSim
 from repro.data.synthetic import make_federated_image_data
 from repro.models.cnn import CUT_CANDIDATES
@@ -33,18 +33,15 @@ from repro.models.cnn import CUT_CANDIDATES
 def run_one(fed, policy: str, channel: str, *, deadline: float, rounds: int,
             es_uplink_mbps: float, seed: int) -> dict:
     """One sweep cell.  ``policy`` is "greedy", "deadline", or "fixed:<cut>"."""
-    h = HierarchyConfig(num_edge_servers=2, clients_per_es=4, kappa0=2,
-                        kappa1=2, global_rounds=rounds)
-    t = TrainConfig(learning_rate=0.05, batch_size=16, freeze_head=True)
+    h = sweep_hierarchy(rounds)
+    t = sweep_train()
     fixed_cut = None
     if policy.startswith("fixed:"):
         fixed_cut = policy.split(":", 1)[1]
         cut_policy, candidates = "fixed", (fixed_cut,)
     else:
         cut_policy, candidates = policy, CUT_CANDIDATES
-    wireless = WirelessConfig(model=channel, mean_uplink_mbps=20.0,
-                              mean_downlink_mbps=80.0, latency_s=0.02,
-                              deadline_s=deadline,
+    wireless = sweep_wireless(channel, deadline_s=deadline,
                               es_uplink_mbps=es_uplink_mbps,
                               cut_policy=cut_policy,
                               cut_candidates=candidates, seed=seed)

@@ -252,8 +252,15 @@ class WirelessConfig:
     trace: tuple[tuple[float, ...], ...] = ()  # (round, client) uplink Mbps
     # ---- per-ES shared uplink (contention) ----
     es_uplink_mbps: float = float("inf")  # shared ES uplink capacity, split
-    #                                  evenly among that round's scheduled
-    #                                  clients (inf -> private uplinks)
+    #                                  among that round's scheduled clients
+    #                                  (inf -> private uplinks)
+    contention: str = "equal"        # sharing rule: "equal" splits the pipe
+    #                                  evenly; "proportional" weights shares
+    #                                  by each client's private rate
+    reshare_uplink: bool = True      # after unaffordable clients withdraw,
+    #                                  re-run contention so survivors absorb
+    #                                  the freed capacity (False reproduces
+    #                                  the conservative single pass)
     # ---- adaptive cut-layer selection (repro.wireless.cutter) ----
     cut_policy: str = "fixed"        # fixed | greedy | deadline
     cut_candidates: tuple = ()       # candidate cuts, shallow -> deep: CNN

@@ -14,6 +14,12 @@ parameter as in [4]; payload per float = (omega + 1) bits.
 
 PHSFL wins iff Phi_HFL > Phi_PHSFL, typically because Z >> Z_0 + Z_c.
 
+Compression (repro.compress): each of the three wire payloads — cut-layer
+activations up (act_codec), cut-layer gradients down (grad_codec), and the
+client-block offload (off_codec) — may carry a Codec whose
+``payload_bits(n_elements)`` replaces the hardcoded ``(omega+1)`` bits per
+element.  ``None`` keeps the paper's full-precision accounting exactly.
+
 The datacenter analogue (measured, not modeled) is the collective-bytes
 delta between the paper-faithful round (full-model all-reduce over 'data')
 and the shared-server round (client-block-only all-reduce): see
@@ -24,6 +30,10 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:
+    from repro.compress import Codec, LinkCodecs
 
 
 @dataclass(frozen=True)
@@ -35,20 +45,41 @@ class CommModel:
     client_params: int = 0       # Z_0
     total_params: int = 0        # Z
     dataset_size: int = 1        # |D_u,ft|
+    # per-payload codecs (None = the paper's (omega+1)-bit accounting)
+    act_codec: Optional["Codec"] = None    # o_fp, client -> ES
+    grad_codec: Optional["Codec"] = None   # o_bp, ES -> client
+    off_codec: Optional["Codec"] = None    # client-block offload
+
+    def _payload(self, codec, n_elements: int) -> int:
+        # None and a width-deferring IdentityCodec both mean: this model's
+        # own (omega+1) bits per element — exact for any omega
+        if codec is None or getattr(codec, "bits_per_element", 0) is None:
+            return n_elements * (self.omega + 1)
+        return codec.payload_bits(n_elements)
 
     def phi_activation_bits(self) -> int:
-        """One direction of one minibatch's cut-layer tensor."""
+        """One direction of one minibatch's cut-layer tensor at FULL
+        precision (the codec-free Remark-1 reference)."""
         return self.batch_size * self.cut_size * (self.omega + 1)
+
+    def phi_activation_up_bits(self) -> int:
+        """One minibatch's o_fp on the wire, through act_codec."""
+        return self._payload(self.act_codec, self.batch_size * self.cut_size)
+
+    def phi_grad_down_bits(self) -> int:
+        """One minibatch's o_bp on the wire, through grad_codec."""
+        return self._payload(self.grad_codec, self.batch_size * self.cut_size)
 
     def phi_indices_bits(self) -> int:
         return self.batch_size * (math.ceil(math.log2(max(self.dataset_size, 2))) + 1)
 
     def phi_local_bits(self) -> int:
-        per_batch = 2 * self.phi_activation_bits() + self.phi_indices_bits()
+        per_batch = (self.phi_activation_up_bits()
+                     + self.phi_grad_down_bits() + self.phi_indices_bits())
         return self.batches_per_epoch * per_batch
 
     def phi_off_bits(self) -> int:
-        return self.client_params * (self.omega + 1)
+        return self._payload(self.off_codec, self.client_params)
 
     def phi_phsfl_bits(self, kappa0: int) -> int:
         """Eq. (17) upper bound for one edge aggregation round."""
@@ -61,12 +92,19 @@ class CommModel:
         return self.phi_hfl_bits() > self.phi_phsfl_bits(kappa0)
 
 
+def _codec_fields(codecs) -> dict:
+    if codecs is None:
+        return {}
+    return dict(act_codec=codecs.activations, grad_codec=codecs.gradients,
+                off_codec=codecs.offload)
+
+
 def comm_for_cnn(cfg, dataset_size: int, *, omega: int = 32,
                  batch_size: int = 32, batches_per_epoch: int = 5,
-                 cut: str | None = None) -> CommModel:
+                 cut: str | None = None,
+                 codecs: Optional["LinkCodecs"] = None) -> CommModel:
     """Instantiate the comm model from the paper's CNN split at ``cut``."""
     import jax
-    import numpy as np
 
     from repro.core.split import count_parts, split_spec_for
     from repro.models import cnn as cnn_mod
@@ -80,12 +118,13 @@ def comm_for_cnn(cfg, dataset_size: int, *, omega: int = 32,
                      batches_per_epoch=batches_per_epoch, cut_size=z_c,
                      client_params=counts["client"],
                      total_params=sum(counts.values()),
-                     dataset_size=dataset_size)
+                     dataset_size=dataset_size, **_codec_fields(codecs))
 
 
 def comm_for_lm(cfg, seq_len: int, dataset_size: int, *, omega: int = 16,
                 batch_size: int = 8, batches_per_epoch: int = 1,
-                cut: int | None = None) -> CommModel:
+                cut: int | None = None,
+                codecs: Optional["LinkCodecs"] = None) -> CommModel:
     """Comm model for an LM architecture (cut after ``cut`` blocks, default
     ``cfg.n_client_layers``).  The config is rebuilt at the requested cut so
     the lead (unscanned) stage always covers the client block and the
@@ -98,6 +137,14 @@ def comm_for_lm(cfg, seq_len: int, dataset_size: int, *, omega: int = 16,
     from repro.models import build_model
 
     if cut is not None and cut != cfg.n_client_layers:
+        if cfg.encdec is not None:
+            # the encoder-decoder client block is the modality frontend
+            # (src_proj + embed), not a depth prefix — every depth candidate
+            # would price the SAME (Z_0, Z_c) cell and the cut controller
+            # would "adapt" over indistinguishable candidates
+            raise ValueError(
+                "encoder-decoder archs have a frontend-based split; "
+                "cut-depth candidates are not supported")
         cfg = dataclasses.replace(cfg, n_client_layers=int(cut))
     model = build_model(cfg)
     params = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
@@ -107,22 +154,43 @@ def comm_for_lm(cfg, seq_len: int, dataset_size: int, *, omega: int = 16,
                      batches_per_epoch=batches_per_epoch, cut_size=z_c,
                      client_params=counts["client"],
                      total_params=sum(counts.values()),
-                     dataset_size=dataset_size)
+                     dataset_size=dataset_size, **_codec_fields(codecs))
+
+
+def _cross_codecs(cuts, codecs, one_cell):
+    """Build a per-cut table, or a (cut, codec_name)-keyed cut x codec table
+    when ``codecs`` is a dict of named LinkCodecs (cut-major order, so the
+    CutController's deepest-feasible search walks cuts first)."""
+    if isinstance(codecs, dict):
+        return {(c, name): one_cell(c, lc)
+                for c in cuts for name, lc in codecs.items()}
+    return {c: one_cell(c, codecs) for c in cuts}
 
 
 def comm_table_for_cnn(cfg, dataset_size: int, *,
                        cuts: tuple[str, ...] | None = None,
-                       **kw) -> dict[str, CommModel]:
+                       codecs=None, **kw) -> dict:
     """Per-cut ``(Z_0, Z_c)`` table over the CNN's candidate cuts, shallow to
-    deep — the byte side of the ASFL-style cut-selection knob."""
+    deep — the byte side of the ASFL-style cut-selection knob.  ``codecs``
+    is a single :class:`repro.compress.LinkCodecs` applied to every cut, or
+    a dict of named LinkCodecs producing the cut x codec bit table keyed by
+    ``(cut, codec_name)``.  An empty ``cuts`` tuple means all candidates."""
     from repro.models import cnn as cnn_mod
 
     cuts = cuts if cuts else cnn_mod.CUT_CANDIDATES
-    return {c: comm_for_cnn(cfg, dataset_size, cut=c, **kw) for c in cuts}
+    return _cross_codecs(cuts, codecs,
+                         lambda c, lc: comm_for_cnn(cfg, dataset_size, cut=c,
+                                                    codecs=lc, **kw))
 
 
 def comm_table_for_lm(cfg, seq_len: int, dataset_size: int, *,
-                      cuts: tuple[int, ...], **kw) -> dict[int, CommModel]:
-    """Per-cut table over candidate ``n_client_layers`` depths for an LM."""
-    return {int(c): comm_for_lm(cfg, seq_len, dataset_size, cut=int(c), **kw)
-            for c in cuts}
+                      cuts: tuple[int, ...], codecs=None, **kw) -> dict:
+    """Per-cut table over candidate ``n_client_layers`` depths for an LM
+    (same ``codecs`` semantics as :func:`comm_table_for_cnn`).  The LM has
+    no default candidate list, so an empty ``cuts`` tuple is an error."""
+    if not cuts:
+        raise ValueError("comm_table_for_lm needs at least one candidate "
+                         "client depth in cuts=")
+    return _cross_codecs(tuple(int(c) for c in cuts), codecs,
+                         lambda c, lc: comm_for_lm(cfg, seq_len, dataset_size,
+                                                   cut=c, codecs=lc, **kw))

@@ -37,20 +37,44 @@ from repro.models import cnn
 
 
 # ---------------------------------------------------------------------------
-def split_grad(params, x, y, cut: str = cnn.DEFAULT_CUT):
+def split_grad(params, x, y, cut: str = cnn.DEFAULT_CUT, *,
+               codecs=None, key=None):
     """Literal split-learning gradient exchange (Steps 3.2–3.8) at ``cut``.
 
     Remark 2 in code: the VJP composition through ANY cut point replays the
     same chain rule, so the returned gradients are bit-identical across all
     candidate cuts (and to monolithic backprop up to float re-association —
-    see test_split.py / test_cutter.py)."""
+    see test_split.py / test_cutter.py).
+
+    ``codecs`` (a :class:`repro.compress.LinkCodecs`, static under jit)
+    pushes the two cut-layer payloads through their lossy channel exactly
+    where the wire sits: the ES computes its forward AND its gradient at
+    the DECODED activations o_fp_hat (what it actually received), and the
+    client backprops from the decoded gradient o_bp_hat.  ``key`` drives
+    stochastic codecs; identity/None codecs reproduce the uncompressed
+    dataflow bit-for-bit."""
     client_keys = cnn.client_keys_for(cut)
     client_p = {k: params[k] for k in client_keys}
     server_p = {k: params[k] for k in params if k not in client_keys}
+    k_act = k_grad = None
+    if codecs is not None:
+        if key is None:
+            if not codecs.is_lossless():
+                # a silent fixed key would reuse the SAME rounding noise
+                # every minibatch, correlating the quantization error the
+                # stochastic rounding exists to keep unbiased
+                raise ValueError("stochastic codecs need an explicit "
+                                 "key= per call")
+            key = jax.random.PRNGKey(0)      # identity: never consumed
+        k_act, k_grad = jax.random.split(key)
 
     # Step 3.2: client forward to the cut layer
     o_fp, client_vjp = jax.vjp(
         lambda cp: cnn.client_forward(cp, x, cut), client_p)
+
+    # Step 3.4 wire: o_fp crosses the uplink through the activation codec
+    if codecs is not None and codecs.activations is not None:
+        o_fp = codecs.activations.apply(k_act, o_fp)
 
     # Steps 3.5–3.6: server forward + server-side backprop
     def server_loss(sp, o):
@@ -61,7 +85,11 @@ def split_grad(params, x, y, cut: str = cnn.DEFAULT_CUT):
     loss, (g_server, o_bp) = jax.value_and_grad(
         server_loss, argnums=(0, 1))(server_p, o_fp)
 
-    # Steps 3.7–3.8: cut-layer gradient back to the client; client VJP
+    # Step 3.7 wire: o_bp crosses the downlink through the gradient codec
+    if codecs is not None and codecs.gradients is not None:
+        o_bp = codecs.gradients.apply(k_grad, o_bp)
+
+    # Step 3.8: cut-layer gradient back to the client; client VJP
     (g_client,) = client_vjp(o_bp)
     return loss, {**g_client, **g_server}
 
@@ -90,7 +118,7 @@ class FedSim:
                  hcfg: HierarchyConfig, tcfg: TrainConfig, *,
                  batches_per_epoch: int = 5, seed: int = 0,
                  wireless: WirelessConfig | None = None,
-                 cut: str | None = None):
+                 cut: str | None = None, codecs=None):
         assert data.num_clients == hcfg.num_clients
         self.cfg, self.data, self.h, self.t = cfg, data, hcfg, tcfg
         self.batches_per_epoch = batches_per_epoch
@@ -101,6 +129,15 @@ class FedSim:
         self.cut = cut if cut is not None else cnn.DEFAULT_CUT
         if self.cut not in cnn.CUT_CANDIDATES:
             raise ValueError(f"unknown cut {self.cut!r}")
+        # the TRAINING codecs (repro.compress.LinkCodecs): applied in the
+        # literal dataflow (activations/gradients at the cut each minibatch,
+        # client-block offload before every edge aggregation) AND handed to
+        # the wireless side so the scheduler prices the same bits the
+        # numerics pay.  Unlike the cut, a lossy codec DOES change learning
+        # dynamics, so the simulation trains with exactly one codec set; the
+        # joint (cut, codec) grid search is the controller's accounting-side
+        # tool (see benchmarks/compress_sweep.py).
+        self.codecs = codecs
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
 
@@ -113,7 +150,8 @@ class FedSim:
             es_assign = np.arange(hcfg.num_clients) // hcfg.clients_per_es
             kw = dict(dataset_size=max(mean_size, 2),
                       batch_size=tcfg.batch_size,
-                      batches_per_epoch=batches_per_epoch)
+                      batches_per_epoch=batches_per_epoch,
+                      codecs=self.codecs)
             if wireless.cut_policy != "fixed" or wireless.cut_candidates:
                 table = comm_table_for_cnn(
                     cfg, cuts=tuple(wireless.cut_candidates) or None, **kw)
@@ -151,9 +189,9 @@ class FedSim:
         tcfg = self.t
         freeze = tcfg.freeze_head
         cut = self.cut
+        codecs = self.codecs
 
-        def sgd_update(params, x, y):
-            loss, g = split_grad(params, x, y, cut)
+        def apply_sgd(params, g, loss):
             lr = tcfg.learning_rate
 
             def upd(path_is_head, p, gg):
@@ -165,7 +203,40 @@ class FedSim:
                                    params[k], g[k]) for k in params}
             return new, loss
 
-        self._client_step = jax.jit(jax.vmap(sgd_update))
+        def sgd_update(params, x, y):
+            loss, g = split_grad(params, x, y, cut)
+            return apply_sgd(params, g, loss)
+
+        def sgd_update_codec(params, x, y, key):
+            loss, g = split_grad(params, x, y, cut, codecs=codecs, key=key)
+            return apply_sgd(params, g, loss)
+
+        if codecs is None:
+            self._client_step = jax.jit(jax.vmap(sgd_update))
+        else:
+            self._client_step = jax.jit(jax.vmap(sgd_update_codec))
+
+        # client-block offload codec: each client's w_{u,0} crosses the
+        # uplink through the offload codec right before edge aggregation
+        # (the downlink broadcast of the refreshed block is charged in the
+        # byte accounting but left lossless in the numerics — the ES is the
+        # fidelity bottleneck the paper's Eq. 17 prices twice)
+        self._offload_step = None
+        if codecs is not None and codecs.offload is not None:
+            from repro.utils.prng import fold_in_str
+            off = codecs.offload
+            ckeys = cnn.client_keys_for(cut)
+
+            def offload_q(params, key):
+                def q(path, leaf):
+                    return off.apply(
+                        fold_in_str(key, jax.tree_util.keystr(path)), leaf)
+
+                block = {k: params[k] for k in ckeys}
+                return {**params,
+                        **jax.tree_util.tree_map_with_path(q, block)}
+
+            self._offload_step = jax.jit(jax.vmap(offload_q))
 
         def head_ft_step(params, x, y):
             """Eq. (18): head-only fine-tuning step."""
@@ -297,6 +368,16 @@ class FedSim:
         xt, yt, wt = self._stacked_test()
 
         sched = self.scheduler
+        # codec PRNG chain: one subkey per stochastic-codec application,
+        # disjoint from the data-sampling RNG and the init key
+        ckey = (jax.random.fold_in(self.key, 0xC0DEC)
+                if self.codecs is not None else None)
+
+        def client_keys():
+            nonlocal ckey
+            ckey, sub = jax.random.split(ckey)
+            return jax.random.split(sub, self.U)
+
         for t2 in range(rounds):
             round_losses = []
             es_any = np.zeros(self.B, bool)
@@ -306,8 +387,16 @@ class FedSim:
                 for _ in range(h.kappa0):                    # local epochs
                     for _ in range(self.batches_per_epoch):  # minibatches
                         x, y = self._sample_minibatches(t.batch_size)
-                        stacked, loss = self._client_step(stacked, x, y)
+                        if self.codecs is None:
+                            stacked, loss = self._client_step(stacked, x, y)
+                        else:
+                            stacked, loss = self._client_step(
+                                stacked, x, y, client_keys())
                         round_losses.append(float(loss.mean()))
+                if self._offload_step is not None:
+                    # the client block crosses the uplink lossily before
+                    # every edge aggregation (Phi_off's numerics side)
+                    stacked = self._offload_step(stacked, client_keys())
                 if sched is None:
                     stacked = self._edge_aggregate(stacked)  # Eq. 14-15
                 else:                                        # masked Eq. 14-15
@@ -318,11 +407,11 @@ class FedSim:
                     res.total_sim_time_s += rep.round_time_s
                     row = {"edge_round": rep.round_idx,
                            "participants": rep.num_participants,
-                           "round_time_s": rep.round_time_s}
-                    if rep.cuts is not None:
-                        sel = rep.scheduled if rep.scheduled.any() \
-                            else np.ones(self.U, bool)
-                        row["mean_cut"] = float(rep.cuts[sel].mean())
+                           "scheduled": int(rep.scheduled.sum()),
+                           "round_time_s": rep.round_time_s,
+                           "bits": rep.bits_tx}
+                    if rep.mean_cut is not None:
+                        row["mean_cut"] = rep.mean_cut
                     res.network.append(row)
                     stacked = self._edge_aggregate(stacked, mask=rep.mask,
                                                    fallback=prev)

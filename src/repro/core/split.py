@@ -65,7 +65,13 @@ def split_spec_for(cfg, cut=None) -> SplitSpec:
     assert isinstance(cfg, ModelConfig)
     n_client = cfg.n_client_layers if cut is None else int(cut)
     if cfg.encdec is not None:
-        # client side = the modality frontend projection + token embedding
+        # client side = the modality frontend projection + token embedding;
+        # the split is NOT depth-parameterized, so a depth cut that expects
+        # to move the boundary must fail loudly rather than no-op
+        if cut is not None and int(cut) != cfg.n_client_layers:
+            raise ValueError(
+                "encoder-decoder archs have a frontend-based split; "
+                "cut-depth candidates are not supported")
         return SplitSpec(
             client_patterns=(r"^src_proj(/|$)", r"^embed(/|$)"),
             head_patterns=(rf"^{cfg.head_name}(/|$)",),

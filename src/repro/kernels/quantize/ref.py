@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the fused quantize-dequantize kernel.
+
+Stochastic rounding is ``floor(x/scale + u)`` with ``u ~ U[0, 1)``: the
+result rounds up with probability equal to the fractional part, so the
+quantizer is unbiased (E[dq(x)] = x away from the clip boundary).  A
+constant ``u = 0.5`` degenerates to round-half-up (deterministic mode).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def quantize_dequantize_ref(x, u, scale, qmax: int):
+    """Fake-quantize ``x`` to the symmetric integer grid [-qmax, qmax].
+
+    x: any shape; u: same shape, uniform in [0,1); scale: () per-tensor
+    step size (absmax / qmax).  Returns x_hat with x's dtype.
+    """
+    scale = jnp.asarray(scale, jnp.float32)
+    inv = jnp.where(scale > 0, 1.0 / scale, 0.0)
+    q = jnp.floor(x.astype(jnp.float32) * inv + u.astype(jnp.float32))
+    q = jnp.clip(q, -float(qmax), float(qmax))
+    return (q * scale).astype(x.dtype)

@@ -98,6 +98,18 @@ def main(argv=None):
     ap.add_argument("--cut-candidates", type=int, nargs="+", default=None,
                     help="candidate client depths (n_client_layers), "
                          "shallow to deep; default: the model's depth only")
+    # ---- compression (repro.compress) ----
+    ap.add_argument("--codec", default="fp32",
+                    choices=["fp32", "int8", "int4", "topk", "fp8"],
+                    help="codec for the split-learning wire payloads "
+                         "(activations up, gradients down, offloads); this "
+                         "driver prices it in the wireless accounting — the "
+                         "CNN simulator (benchmarks/compress_sweep.py) "
+                         "additionally applies it in the dataflow")
+    ap.add_argument("--codec-bits", type=int, default=None,
+                    help="override the uniform quantizer's bit width")
+    ap.add_argument("--topk-frac", type=float, default=0.05,
+                    help="kept fraction for --codec topk")
     args = ap.parse_args(argv)
 
     log = MetricLogger("train")
@@ -126,6 +138,11 @@ def main(argv=None):
     # wireless scenario: channel + participation scheduler (None = ideal)
     scheduler = None
     if args.channel != "ideal":
+        from repro.compress import link_codecs
+        codecs = None
+        if args.codec != "fp32":
+            codecs = link_codecs(args.codec, bits=args.codec_bits,
+                                 topk_frac=args.topk_frac)
         candidates = tuple(args.cut_candidates or ())
         wcfg = WirelessConfig(model=args.channel,
                               mean_uplink_mbps=args.mean_rate_mbps,
@@ -139,7 +156,7 @@ def main(argv=None):
         comm_kw = dict(seq_len=args.seq,
                        dataset_size=args.rounds * args.local_steps *
                        args.micro, batch_size=args.micro,
-                       batches_per_epoch=1)
+                       batches_per_epoch=1, codecs=codecs)
         es_assign = np.arange(C) // hcfg.clients_per_es
         if wcfg.cut_policy != "fixed" or candidates:
             table = comm_table_for_lm(
@@ -198,16 +215,12 @@ def main(argv=None):
                 params, opt_state, metrics = round_fn(
                     params, opt_state, batch, au, ab, mask)
                 extra = {}
-                if rep.cuts is not None:
-                    # cuts of clients that actually transmitted (entries of
-                    # unscheduled clients are hypothetical private-rate picks)
-                    sel = rep.scheduled if rep.scheduled.any() \
-                        else np.ones(C, bool)
-                    extra["mean_cut"] = float(rep.cuts[sel].mean())
+                if rep.mean_cut is not None:
+                    extra["mean_cut"] = rep.mean_cut
                 log.log(step=r, loss=metrics["loss"],
                         participants=rep.num_participants,
                         round_time_s=rep.round_time_s,
-                        sim_time_s=sim_time,
+                        sim_time_s=sim_time, bits_tx=rep.bits_tx,
                         s_per_round=(time.time() - t0) / (r + 1), **extra)
             else:
                 params, opt_state, metrics = round_fn(params, opt_state,

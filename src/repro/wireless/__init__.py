@@ -27,10 +27,17 @@ Channel (``repro.wireless.channel.ChannelModel``):
   over rounds, resized over clients); downlink scales by the configured
   downlink/uplink ratio.
 - ``es_uplink_mbps``: SHARED uplink capacity of each edge server.  The
-  scheduled clients of one ES split it evenly — each gets the smaller of
-  its private rate and its fair share, so the per-ES aggregate rate never
-  exceeds the capacity.  ``inf`` (default) keeps every uplink private;
-  an ideal channel bypasses contention entirely.
+  scheduled clients of one ES split it — each gets the smaller of its
+  private rate and its share, so the per-ES aggregate rate never exceeds
+  the capacity.  ``inf`` (default) keeps every uplink private; an ideal
+  channel bypasses contention entirely.
+- ``contention``: the sharing rule — ``"equal"`` (default) splits the pipe
+  evenly among that round's scheduled clients; ``"proportional"`` weights
+  shares by each client's private rate (proportional-fair scheduling).
+- ``reshare_uplink``: after the contended price forces some clients to
+  withdraw, a second contention pass (default True) re-shares the freed
+  capacity among the survivors — their rates only rise, so one pass
+  suffices; False reproduces the original conservative single pass.
 
 Cut selection (``repro.wireless.cutter.CutController``):
 
@@ -42,7 +49,10 @@ Cut selection (``repro.wireless.cutter.CutController``):
   (``repro.models.cnn.CUT_CANDIDATES``) or LM client depths; ``()`` means
   the model's single default cut.  ``repro.core.comm`` builds the per-cut
   ``(Z_0, Z_c)`` byte table (``comm_table_for_cnn``/``comm_table_for_lm``)
-  the controller prices cuts with.
+  the controller prices cuts with.  A table built with a dict of named
+  ``repro.compress.LinkCodecs`` prices the joint (cut, codec) GRID instead:
+  the controller searches the flat cell list under the same policies and
+  ``RoundReport.codecs`` carries each client's chosen codec.
 
 Participation (``repro.wireless.scheduler.ParticipationScheduler``):
 

@@ -54,9 +54,13 @@ def client_round_bits(comm: CommModel, kappa0: int) -> RoundBits:
               per minibatch, plus one client-block offload (Phi_off).
     Downlink: the matching cut-layer gradients o_bp, plus the refreshed
               client block broadcast at the aggregation boundary.
+
+    Each payload travels through the CommModel's configured codec
+    (repro.compress) — with no codecs this is the original (omega+1)-bit
+    accounting exactly.
     """
-    per_batch_up = comm.phi_activation_bits() + comm.phi_indices_bits()
-    per_batch_down = comm.phi_activation_bits()
+    per_batch_up = comm.phi_activation_up_bits() + comm.phi_indices_bits()
+    per_batch_down = comm.phi_grad_down_bits()
     nb = comm.batches_per_epoch
     return RoundBits(
         uplink=kappa0 * nb * per_batch_up + comm.phi_off_bits(),
@@ -72,6 +76,9 @@ class ChannelModel:
             raise ValueError(f"unknown channel model {cfg.model!r}")
         if cfg.model == "trace" and not cfg.trace:
             raise ValueError("trace channel requires WirelessConfig.trace")
+        if cfg.contention not in ("equal", "proportional"):
+            raise ValueError(f"unknown contention rule {cfg.contention!r}; "
+                             f"one of ('equal', 'proportional')")
         self.cfg = cfg
         self.U = num_clients
         self._rng = np.random.default_rng(cfg.seed)
@@ -107,9 +114,14 @@ class ChannelModel:
         """Effective uplink rates when each ES's uplink is a SHARED pipe.
 
         The ``active`` (scheduled) clients of one ES split its capacity
-        ``es_uplink_mbps`` evenly; each client gets the smaller of its own
-        link rate and its fair share, so the per-ES aggregate never exceeds
-        the ES capacity.  Inactive clients keep their private rate (they do
+        ``es_uplink_mbps``; each client gets the smaller of its own link
+        rate and its share, so the per-ES aggregate never exceeds the ES
+        capacity.  ``WirelessConfig.contention`` picks the sharing rule:
+        ``"equal"`` gives every active client the same share,
+        ``"proportional"`` weights shares by the clients' PRIVATE rates
+        (proportional-fair: a client with twice the link quality gets twice
+        the pipe, so good channels are not dragged down to the worst
+        client's share).  Inactive clients keep their private rate (they do
         not transmit, so they occupy no share).  An ideal channel or an
         infinite ES capacity bypasses contention entirely.
         """
@@ -118,8 +130,13 @@ class ChannelModel:
             return link.uplink_bps
         active = np.asarray(active, bool)
         es = np.asarray(es_assign, int)
-        counts = np.bincount(es[active], minlength=es.max() + 1)
-        share = cap / np.maximum(counts[es], 1)
+        if self.cfg.contention == "proportional":
+            weight = np.where(active, link.uplink_bps, 0.0)
+            totals = np.bincount(es, weights=weight, minlength=es.max() + 1)
+            share = cap * link.uplink_bps / np.maximum(totals[es], 1.0)
+        else:                                    # "equal"
+            counts = np.bincount(es[active], minlength=es.max() + 1)
+            share = cap / np.maximum(counts[es], 1)
         return np.where(active, np.minimum(link.uplink_bps, share),
                         link.uplink_bps)
 

@@ -18,6 +18,13 @@ controller that turns per-round channel state into a per-client cut choice:
                 block, so under a tight deadline the controller walks down
                 exactly as far as the channel allows.
 
+The candidate list may also be a joint (cut, codec) GRID: a CommModel table
+built with a dict of named ``repro.compress.LinkCodecs`` prices every
+cut x codec cell, and ``decide`` searches the flat cell list under the same
+greedy/deadline policies — compression is just more candidate cells with
+fewer bits.  ``cut_pos``/``codec_pos`` map the chosen cell index back to
+its cut depth and codec so reports stay interpretable.
+
 The controller is stateless: :class:`~repro.wireless.scheduler.
 ParticipationScheduler` calls :meth:`CutController.decide` twice per round —
 once on the private (uncontended) rates to make scheduling decisions, and
@@ -39,22 +46,26 @@ POLICIES = ("fixed", "greedy", "deadline")
 
 @dataclass(frozen=True)
 class CutSpec:
-    """One candidate cut: its name and its Remark-1 byte accounting."""
+    """One candidate (cut, codec) cell: name + Remark-1 byte accounting."""
     name: str | int          # "conv1" (CNN) or n_client_layers (LM)
-    bits: RoundBits          # per-edge-round traffic at this cut
+    bits: RoundBits          # per-edge-round traffic at this cut x codec
     z0: int                  # Z_0: client-block parameters
     z_c: int                 # Z_c: cut-layer activation elements per sample
+    codec: str = "fp32"      # codec-set name ("fp32" = uncompressed)
 
 
 def cut_specs(comms: dict, kappa0: int) -> tuple[CutSpec, ...]:
     """Build the candidate list from a per-cut CommModel table (the output
     of ``comm_table_for_cnn`` / ``comm_table_for_lm``), preserving its
-    shallow-to-deep order."""
+    shallow-to-deep order.  Tables built with a codecs dict key their cells
+    ``(cut, codec_name)``; plain tables get the ``"fp32"`` codec label."""
     specs = []
-    for name, cm in comms.items():
+    for key, cm in comms.items():
         assert isinstance(cm, CommModel)
+        name, codec = key if isinstance(key, tuple) else (key, "fp32")
         specs.append(CutSpec(name=name, bits=client_round_bits(cm, kappa0),
-                             z0=cm.client_params, z_c=cm.cut_size))
+                             z0=cm.client_params, z_c=cm.cut_size,
+                             codec=codec))
     return tuple(specs)
 
 
@@ -78,10 +89,23 @@ class CutController:
         self.tx_power_w = tx_power_w
         self.up_bits = np.array([s.bits.uplink for s in specs], np.float64)
         self.down_bits = np.array([s.bits.downlink for s in specs], np.float64)
+        # joint (cut, codec) grids: map each spec index back to its cut
+        # position (shallow -> deep) and its codec position, so reports can
+        # say WHICH split and WHICH codec a client got, not just the cell
+        self.cut_names = tuple(dict.fromkeys(s.name for s in specs))
+        self.codec_names = tuple(dict.fromkeys(s.codec for s in specs))
+        self.cut_pos = np.array([self.cut_names.index(s.name) for s in specs])
+        self.codec_pos = np.array([self.codec_names.index(s.codec)
+                                   for s in specs])
 
     @property
     def num_cuts(self) -> int:
         return len(self.specs)
+
+    @property
+    def has_codec_grid(self) -> bool:
+        """True when the candidate grid spans more than one codec set."""
+        return len(self.codec_names) > 1
 
     def bits_for(self, cuts: np.ndarray) -> RoundBits:
         """Per-client (uplink, downlink) bit arrays for a cut-index vector."""
@@ -126,7 +150,10 @@ class CutController:
         if self.policy == "greedy":
             return np.where(none_affordable, cheapest, fastest_aff)
         # deadline: deepest affordable cut meeting the deadline (candidates
-        # are ordered shallow -> deep, so the highest feasible index wins)
+        # are ordered shallow -> deep, so the highest feasible index wins;
+        # on a cut x codec grid the cut-major order means the deepest cut
+        # wins first and, within it, the LAST-listed feasible codec — list
+        # codecs cheapest-last to prefer compression at the frontier)
         feasible = affordable & (times <= self.deadline_s)
         idx = np.arange(self.num_cuts)[:, None]
         deepest = np.where(feasible, idx, -1).max(axis=0)
@@ -140,14 +167,19 @@ def make_cut_controller(comms: dict, kappa0: int, *, policy: str = "fixed",
                         tx_power_w: float = 0.5) -> CutController:
     """Convenience: per-cut CommModel table -> controller.
 
-    ``fixed_cut`` may be a candidate NAME (e.g. ``"conv1"``, or an LM depth —
-    name matches win over index interpretation) instead of an index.
+    ``fixed_cut`` may be a candidate NAME (e.g. ``"conv1"``, an LM depth, or
+    a ``(cut, codec_name)`` cell of a cut x codec table — name matches win
+    over index interpretation) instead of an index.  A bare cut name against
+    a codec grid picks that cut's FIRST-listed codec.
     """
     specs = cut_specs(comms, kappa0)
+    cells = [(s.name, s.codec) for s in specs]
     names = [s.name for s in specs]
-    if fixed_cut in names:
+    if fixed_cut in cells:
+        fixed_cut = cells.index(fixed_cut)
+    elif fixed_cut in names:
         fixed_cut = names.index(fixed_cut)
     elif not (isinstance(fixed_cut, int) and 0 <= fixed_cut < len(specs)):
-        raise ValueError(f"fixed_cut {fixed_cut!r} not among {names}")
+        raise ValueError(f"fixed_cut {fixed_cut!r} not among {cells}")
     return CutController(specs, policy, fixed_cut=fixed_cut,
                          deadline_s=deadline_s, tx_power_w=tx_power_w)

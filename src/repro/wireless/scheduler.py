@@ -20,11 +20,17 @@ Two optional refinements sit between gates 2 and 3:
   CutController` picks a per-client cut each round, making the traffic
   (and therefore times, energies, and the deadline outcome) cut-indexed;
 - **per-ES contention** (``es_uplink_mbps`` finite): the scheduled clients
-  of one ES split its uplink capacity evenly, so times/energies are
-  recomputed at the contended rates, adaptive cut policies re-decide, and
-  clients the contended price makes unaffordable withdraw (they never
-  transmit, cost nothing, and make nobody wait — a conservative single
-  pass: the capacity they would have used is not re-shared this round).
+  of one ES split its uplink capacity (evenly, or rate-proportionally under
+  ``contention="proportional"``), so times/energies are recomputed at the
+  contended rates, adaptive cut policies re-decide, and clients the
+  contended price makes unaffordable withdraw (they never transmit, cost
+  nothing, and make nobody wait).  With ``reshare_uplink=True`` (default) a
+  SECOND contention pass then re-shares the capacity the withdrawn clients
+  freed among the survivors — survivor rates can only rise (fewer clients
+  split the same pipe), so no further withdrawals are possible and one
+  extra pass suffices; the survivors keep the cuts they chose at the
+  first-pass rates (the freed capacity only speeds them up).
+  ``reshare_uplink=False`` reproduces the conservative single pass.
 
 Energy accounting: every client that TRANSMITS pays for the airtime it
 actually burns — a scheduled client that misses the deadline transmitted
@@ -58,10 +64,26 @@ class RoundReport:
     scheduled: np.ndarray = None   # (U,) bool: transmitted this round
     cuts: np.ndarray = None        # (U,) int cut indices (None: fixed bits)
     uplink_bps: np.ndarray = None  # (U,) effective (contended) uplink rates
+    codecs: np.ndarray = None      # (U,) int codec indices into the
+    #                                controller's codec_names (None unless a
+    #                                cut x codec grid is in play)
+    bits_tx: float = 0.0           # total offered traffic (up+down bits) of
+    #                                this round's scheduled clients
 
     @property
     def num_participants(self) -> int:
         return int(self.mask.sum())
+
+    @property
+    def mean_cut(self) -> float | None:
+        """Mean cut position of the clients that actually transmitted (all
+        clients when nobody did — their entries are the hypothetical
+        private-rate picks).  None without a cut controller."""
+        if self.cuts is None:
+            return None
+        sel = (self.scheduled if self.scheduled is not None
+               and self.scheduled.any() else np.ones(len(self.cuts), bool))
+        return float(self.cuts[sel].mean())
 
 
 class ParticipationScheduler:
@@ -112,6 +134,7 @@ class ParticipationScheduler:
             scheduled &= self._rng.random(self.U) < cfg.participation_prob
 
         # ---- per-ES uplink contention among the scheduled clients ----
+        private = link
         eff_up = self.channel.contended_uplink(link, scheduled,
                                                self.es_assign)
         if eff_up is not link.uplink_bps:
@@ -126,7 +149,21 @@ class ParticipationScheduler:
             energy = self.channel.round_energy_j(link, bits)
             # the contended price can only be higher; a client that can no
             # longer afford it withdraws before transmitting
+            withdrawn = scheduled & (self.energy_left < energy)
             scheduled &= self.energy_left >= energy
+            if (self.cfg.reshare_uplink and withdrawn.any()
+                    and scheduled.any()):
+                # second pass: survivors absorb the capacity the withdrawn
+                # clients freed.  Rates can only rise (fewer clients share
+                # the same pipe), so times/energies only fall and no new
+                # withdrawal is possible; the survivors keep their
+                # first-pass cut/codec choices.
+                eff_up = self.channel.contended_uplink(private, scheduled,
+                                                       self.es_assign)
+                link = LinkState(eff_up, private.downlink_bps,
+                                 private.latency_s)
+                times = self.channel.round_time_s(link, bits)
+                energy = self.channel.round_energy_j(link, bits)
 
         alive = scheduled & (times <= cfg.deadline_s)    # gate 3: deadline
 
@@ -151,8 +188,20 @@ class ParticipationScheduler:
         else:
             t = times[alive].max()
             round_time = float(t) if np.isfinite(t) else 0.0
+        # translate internal candidate-cell indices into cut depth / codec
+        # positions so the report reads "which split, which codec", and sum
+        # the offered traffic of everyone who transmitted
+        rep_cuts = rep_codecs = None
+        if cuts is not None:
+            rep_cuts = self.cutter.cut_pos[cuts]
+            if self.cutter.has_codec_grid:
+                rep_codecs = self.cutter.codec_pos[cuts]
+        up = np.broadcast_to(np.asarray(bits.uplink, float), (self.U,))
+        down = np.broadcast_to(np.asarray(bits.downlink, float), (self.U,))
+        bits_tx = float((up + down)[scheduled].sum())
         return RoundReport(round_idx=round_idx, mask=alive.astype(np.float64),
                            times_s=times, round_time_s=round_time,
                            energy_left_j=self.energy_left.copy(),
-                           scheduled=scheduled.copy(), cuts=cuts,
-                           uplink_bps=np.asarray(link.uplink_bps).copy())
+                           scheduled=scheduled.copy(), cuts=rep_cuts,
+                           uplink_bps=np.asarray(link.uplink_bps).copy(),
+                           codecs=rep_codecs, bits_tx=bits_tx)

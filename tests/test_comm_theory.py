@@ -7,6 +7,7 @@ from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
 from repro.configs.registry import get_arch
 from repro.core import (BoundInputs, bound_terms, comm_for_cnn, comm_for_lm,
                         lr_limit, uniform_weights)
+from repro.core.comm import CommModel, comm_table_for_cnn, comm_table_for_lm
 
 
 def test_cnn_comm_model_paper_inequality():
@@ -29,6 +30,73 @@ def test_cnn_comm_model_paper_inequality():
 def test_comm_monotone_in_kappa0(k0):
     cm = comm_for_cnn(CNN_CFG, dataset_size=500)
     assert cm.phi_phsfl_bits(k0 + 1) > cm.phi_phsfl_bits(k0)
+
+
+# ----------------------------------------------- degenerate inputs ---------
+@pytest.mark.parametrize("ds", [0, 1, 2])
+def test_index_bits_at_tiny_dataset(ds):
+    """A one-sample (or empty) fine-tuning set must not blow up the
+    ceil(log2 |D_u|) index accounting: the size clamps to 2, so every
+    sampled index costs exactly 1+1 bits."""
+    cm = CommModel(batch_size=16, dataset_size=ds)
+    assert cm.phi_indices_bits() == 16 * 2
+    assert cm.phi_local_bits() >= 0
+    big = CommModel(batch_size=16, dataset_size=1 << 20)
+    assert big.phi_indices_bits() == 16 * 21
+    assert big.phi_indices_bits() > cm.phi_indices_bits()
+
+
+def test_comm_table_empty_cuts():
+    """CNN tables treat an empty cuts tuple as 'all candidates' (there is a
+    canonical list); the LM has none, so empty cuts is an error, not a
+    silently empty table the cut controller would choke on."""
+    from repro.models.cnn import CUT_CANDIDATES
+
+    table = comm_table_for_cnn(CNN_CFG, dataset_size=400, cuts=())
+    assert tuple(table) == CUT_CANDIDATES
+    cfg = get_arch("xlstm-350m").reduced()
+    with pytest.raises(ValueError, match="cuts"):
+        comm_table_for_lm(cfg, seq_len=64, dataset_size=100, cuts=())
+
+
+def test_encdec_rejects_cut_depth_candidates():
+    """The encoder-decoder split is the modality frontend, not a depth
+    prefix: a cut-depth table would price identical (Z_0, Z_c) cells and
+    the cut controller would 'adapt' over indistinguishable candidates —
+    fail loudly instead."""
+    cfg = get_arch("seamless-m4t-medium").reduced()
+    with pytest.raises(ValueError, match="frontend"):
+        comm_for_lm(cfg, seq_len=32, dataset_size=100,
+                    cut=cfg.n_client_layers + 1)
+    with pytest.raises(ValueError, match="frontend"):
+        comm_table_for_lm(cfg, seq_len=32, dataset_size=100, cuts=(1, 2))
+    # the config's own depth is fine (the frontend split is the one cell)
+    cm = comm_for_lm(cfg, seq_len=32, dataset_size=100,
+                     cut=cfg.n_client_layers)
+    assert cm.client_params > 0
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_phi_phsfl_monotone_in_kappa0_property(seed):
+    """Property (seeded-parametrize style, no hypothesis dep): for ANY comm
+    model — random geometry, random codecs included — one more local epoch
+    strictly adds bits, because every epoch ships at least the minibatch
+    indices."""
+    from repro.compress import get_codec
+
+    rng = np.random.default_rng(seed)
+    pick = lambda: get_codec(
+        str(rng.choice(["fp32", "int8", "int4", "topk", "fp8"])))
+    cm = CommModel(omega=int(rng.integers(8, 33)),
+                   batch_size=int(rng.integers(1, 64)),
+                   batches_per_epoch=int(rng.integers(1, 8)),
+                   cut_size=int(rng.integers(0, 20_000)),
+                   client_params=int(rng.integers(0, 3_000_000)),
+                   total_params=int(rng.integers(1, 5_000_000)),
+                   dataset_size=int(rng.integers(0, 10_000)),
+                   act_codec=pick(), grad_codec=pick(), off_codec=pick())
+    for k0 in (1, 2, 5, 13):
+        assert cm.phi_phsfl_bits(k0 + 1) > cm.phi_phsfl_bits(k0)
 
 
 def test_lm_comm_model():

@@ -1,0 +1,504 @@
+"""Compression subsystem (ISSUE 4): codecs, Pallas quantizer, wiring.
+
+Four layers of lock-down:
+
+1. the codecs themselves — payload accounting, bounded/unbiased quantization
+   error, encode/decode vs the fused apply path, and the Pallas kernel vs
+   its pure-jnp oracle (exact, under jit and interpret mode);
+2. the comm layer — identity codecs reproduce the (omega+1)-bit accounting
+   exactly, the cut x codec table prices every cell, and compressed cells
+   strictly undercut fp32;
+3. the dataflow — split_grad/FedSim with identity codecs are BIT-identical
+   to the codec-free simulator (the subsystem's regression anchor), int8
+   actually perturbs training (proof the codec sits in the real dataflow)
+   while still learning;
+4. the wireless side — the joint (cut, codec) controller grid, the codec
+   carried per client in RoundReport, proportional-fair contention,
+   capacity re-sharing after withdrawals, and the compress-sweep acceptance
+   bar: int8 strictly increases scheduled participation over fp32 at a
+   fixed deadline.
+"""
+
+import importlib.util
+import math
+import pathlib
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.compress import (CODEC_NAMES, Fp8Codec, IdentityCodec, LinkCodecs,
+                            TopKCodec, get_codec, link_codecs)
+from repro.configs.base import HierarchyConfig, TrainConfig, WirelessConfig
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.core.comm import comm_for_cnn, comm_table_for_cnn
+from repro.core.fedsim import FedSim, split_grad
+from repro.data.synthetic import make_federated_image_data
+from repro.kernels.quantize.ops import quantize_dequantize, tensor_scale
+from repro.models import cnn
+from repro.wireless import (ChannelModel, client_round_bits,
+                            make_cut_controller, make_scheduler)
+
+
+def _sweep_module():
+    spec = importlib.util.spec_from_file_location(
+        "compress_sweep", pathlib.Path(__file__).parent.parent /
+        "benchmarks" / "compress_sweep.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+# ------------------------------------------------------------- codecs ------
+def test_codec_factory_and_payloads():
+    n = 10_000
+    fp32 = get_codec("fp32")
+    assert isinstance(fp32, IdentityCodec)
+    # the default identity codec defers its width to the comm model's omega
+    # (so one codec is exact for CNN omega=32 AND LM omega=16); standalone
+    # payload math needs an explicit width
+    assert fp32.bits_per_element is None
+    with pytest.raises(ValueError, match="omega"):
+        fp32.payload_bits(n)
+    assert get_codec("fp32", omega=32).payload_bits(n) == n * 33
+    assert get_codec("fp32", omega=16).payload_bits(n) == n * 17
+    assert get_codec("int8").payload_bits(n) == n * 8 + 32
+    assert get_codec("int4").payload_bits(n) == n * 4 + 32
+    assert get_codec("int8", bits=6).payload_bits(n) == n * 6 + 32
+    assert get_codec("fp8").payload_bits(n) == n * 8 + 32
+    k = max(1, int(n * 0.05))
+    assert get_codec("topk").payload_bits(n) == k * (32 + 14)  # log2(1e4)->14
+    with pytest.raises(ValueError):
+        get_codec("huffman")
+    # int8 lanes cap the quantizer width: wider would silently wrap
+    with pytest.raises(ValueError, match="2..8"):
+        get_codec("int8", bits=12)
+    # frozen + hashable: usable as static jit data and CommModel fields
+    assert get_codec("int8") == get_codec("int8")
+    assert hash(get_codec("int4")) == hash(get_codec("int4"))
+
+
+@pytest.mark.parametrize("shape", [(7,), (16, 16, 16, 64), (3, 5, 11)])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_pallas_quantizer_matches_ref(shape, bits, rng):
+    """Acceptance: the Pallas int8/int4 quantizer matches ref.py under jit
+    and interpret mode — exactly, since both run the same float ops."""
+    x = jnp.asarray(rng.normal(size=shape).astype(np.float32)) * 3.0
+    key = jax.random.PRNGKey(0)
+    got = quantize_dequantize(x, key, bits=bits)            # pallas interpret
+    ref = quantize_dequantize(x, key, bits=bits, use_ref=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    jitted = jax.jit(lambda x_, k_: quantize_dequantize(x_, k_, bits=bits))
+    np.testing.assert_array_equal(np.asarray(jitted(x, key)), np.asarray(ref))
+
+
+def test_quantizer_error_bounded_and_unbiased(rng):
+    x = jnp.asarray(rng.normal(size=(64, 64)).astype(np.float32))
+    scale = float(tensor_scale(x, 127)[0, 0])
+    out = quantize_dequantize(x, jax.random.PRNGKey(1), bits=8)
+    # stochastic rounding moves a value at most one grid step
+    assert float(jnp.abs(out - x).max()) <= scale + 1e-7
+    # ...and is unbiased: averaging over keys recovers x
+    outs = [quantize_dequantize(x, jax.random.PRNGKey(k), bits=8)
+            for k in range(64)]
+    mean_err = float(jnp.abs(jnp.stack(outs).mean(0) - x).mean())
+    assert mean_err < scale / 4
+
+
+def test_quantizer_deterministic_mode_and_zero_input():
+    x = jnp.zeros((8, 128), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(quantize_dequantize(x, jax.random.PRNGKey(0), bits=8)), 0.0)
+    y = jnp.asarray([[0.2, -1.0, 0.6]], jnp.float32)
+    a = quantize_dequantize(y, jax.random.PRNGKey(0), bits=8, stochastic=False)
+    b = quantize_dequantize(y, jax.random.PRNGKey(9), bits=8, stochastic=False)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quantizer_ste_gradient(rng):
+    x = jnp.asarray(rng.normal(size=(32, 32)).astype(np.float32))
+    g = jax.grad(lambda z: quantize_dequantize(
+        z, jax.random.PRNGKey(0), bits=8).sum())(x)
+    np.testing.assert_array_equal(np.asarray(g), 1.0)
+
+
+@pytest.mark.parametrize("name", ["int8", "int4"])
+def test_uniform_codec_encode_decode_matches_apply(name, rng):
+    c = get_codec(name)
+    x = jnp.asarray(rng.normal(size=(16, 128)).astype(np.float32))
+    key = jax.random.PRNGKey(3)
+    q, scale = c.encode(key, x)
+    assert q.dtype == jnp.int8
+    assert int(jnp.abs(q).max()) <= c.qmax
+    np.testing.assert_allclose(np.asarray(c.decode((q, scale))),
+                               np.asarray(c.apply(key, x)), rtol=0, atol=0)
+
+
+def test_topk_codec_keeps_largest_and_counts_index_bits(rng):
+    c = TopKCodec(frac=0.1)
+    x = jnp.asarray(rng.normal(size=(10, 50)).astype(np.float32))
+    xh = np.asarray(c.apply(jax.random.PRNGKey(0), x))
+    k = c.k_for(500)
+    assert k == 50
+    nz = xh != 0
+    assert nz.sum() == k
+    # the kept entries are exact and are the k largest magnitudes
+    np.testing.assert_array_equal(xh[nz], np.asarray(x)[nz])
+    thresh = np.sort(np.abs(np.asarray(x)).ravel())[-k]
+    assert (np.abs(np.asarray(x)[~nz]) <= thresh).all()
+    assert c.payload_bits(500) == k * (32 + math.ceil(math.log2(500)))
+
+
+def test_fp8_codec_roundtrip(rng):
+    c = Fp8Codec()
+    x = jnp.asarray(rng.normal(size=(256,)).astype(np.float32)) * 100.0
+    xh = np.asarray(c.apply(jax.random.PRNGKey(0), x))
+    # e4m3 keeps ~3 mantissa bits: 2^-3 relative error after scaling
+    np.testing.assert_allclose(xh, np.asarray(x),
+                               atol=float(np.abs(x).max()) * 2 ** -3)
+
+
+# ------------------------------------------------------- comm accounting ---
+def test_identity_codecs_reproduce_legacy_accounting():
+    plain = comm_for_cnn(CNN_CFG, dataset_size=400, batch_size=16,
+                         batches_per_epoch=2)
+    ident = comm_for_cnn(CNN_CFG, dataset_size=400, batch_size=16,
+                         batches_per_epoch=2, codecs=link_codecs("fp32"))
+    assert ident.phi_local_bits() == plain.phi_local_bits()
+    assert ident.phi_off_bits() == plain.phi_off_bits()
+    assert ident.phi_phsfl_bits(5) == plain.phi_phsfl_bits(5)
+    for k0 in (1, 5):
+        assert client_round_bits(ident, k0) == client_round_bits(plain, k0)
+    # per-direction payloads fall back to the full-precision reference
+    assert plain.phi_activation_up_bits() == plain.phi_activation_bits()
+    assert plain.phi_grad_down_bits() == plain.phi_activation_bits()
+    # the deferred-width identity codec is exact at ANY omega — the LM path
+    # prices floats at (16+1) bits, not the CNN's 33
+    from repro.configs.registry import get_arch
+    lm_cfg = get_arch("xlstm-350m").reduced()
+    from repro.core.comm import comm_for_lm
+    lm_plain = comm_for_lm(lm_cfg, seq_len=64, dataset_size=100)
+    lm_ident = comm_for_lm(lm_cfg, seq_len=64, dataset_size=100,
+                           codecs=link_codecs("fp32"))
+    assert lm_ident.phi_local_bits() == lm_plain.phi_local_bits()
+    assert lm_ident.phi_off_bits() == lm_plain.phi_off_bits()
+
+
+def test_cut_codec_table_prices_every_cell():
+    named = {"fp32": None, "int8": link_codecs("int8")}
+    table = comm_table_for_cnn(CNN_CFG, dataset_size=400, batch_size=16,
+                               batches_per_epoch=2, codecs=named)
+    assert set(table) == {(c, n) for c in cnn.CUT_CANDIDATES for n in named}
+    for c in cnn.CUT_CANDIDATES:
+        fp, q = table[(c, "fp32")], table[(c, "int8")]
+        assert q.phi_local_bits() < fp.phi_local_bits()
+        assert q.phi_off_bits() < fp.phi_off_bits()
+        b_fp, b_q = client_round_bits(fp, 2), client_round_bits(q, 2)
+        assert b_q.uplink < b_fp.uplink and b_q.downlink < b_fp.downlink
+    # asymmetric codecs: only the uplink payload shrinks
+    up_only = LinkCodecs(activations=get_codec("int8"))
+    cm = comm_for_cnn(CNN_CFG, dataset_size=400, codecs=up_only)
+    plain = comm_for_cnn(CNN_CFG, dataset_size=400)
+    assert cm.phi_activation_up_bits() < plain.phi_activation_up_bits()
+    assert cm.phi_grad_down_bits() == plain.phi_grad_down_bits()
+    assert cm.phi_off_bits() == plain.phi_off_bits()
+
+
+# ------------------------------------------------------------ dataflow -----
+def test_split_grad_identity_codecs_bit_identical(rng):
+    params = cnn.init(jax.random.PRNGKey(1), CNN_CFG)
+    x = jnp.asarray(rng.normal(size=(16, 32, 32, 3)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=16).astype(np.int32))
+    f = jax.jit(split_grad, static_argnames=("cut", "codecs"))
+    ref_loss, ref_g = f(params, x, y, cut="conv1")
+    loss, g = f(params, x, y, cut="conv1", codecs=link_codecs("fp32"),
+                key=jax.random.PRNGKey(7))
+    assert np.asarray(loss) == np.asarray(ref_loss)
+    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(ref_g)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # lossless codecs never consume the key, so omitting it is fine...
+    loss2, _ = f(params, x, y, cut="conv1", codecs=link_codecs("fp32"))
+    assert np.asarray(loss2) == np.asarray(ref_loss)
+    # ...but stochastic codecs without a key would silently reuse the same
+    # rounding noise every call — that misuse must raise
+    with pytest.raises(ValueError, match="key"):
+        split_grad(params, x, y, cut="conv1", codecs=link_codecs("int8"))
+
+
+def test_split_grad_int8_perturbs_but_tracks(rng):
+    params = cnn.init(jax.random.PRNGKey(1), CNN_CFG)
+    x = jnp.asarray(rng.normal(size=(8, 32, 32, 3)).astype(np.float32))
+    y = jnp.asarray(rng.integers(0, 10, size=8).astype(np.int32))
+    ref_loss, ref_g = split_grad(params, x, y, cut="conv1")
+    loss, g = split_grad(params, x, y, cut="conv1",
+                         codecs=link_codecs("int8"),
+                         key=jax.random.PRNGKey(7))
+    assert float(loss) != float(ref_loss)            # the codec is in play
+    np.testing.assert_allclose(float(loss), float(ref_loss), rtol=0.1)
+    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(ref_g)):
+        assert np.isfinite(np.asarray(a)).all()
+        assert np.asarray(a).shape == np.asarray(b).shape
+
+
+@pytest.fixture(scope="module")
+def small_fed():
+    return make_federated_image_data(8, alpha=0.4, train_per_class=20,
+                                     test_per_class=10, seed=0)
+
+
+def _fedsim(fed, codecs=None, wireless=None, **kw):
+    h = HierarchyConfig(num_edge_servers=2, clients_per_es=4, kappa0=1,
+                        kappa1=2, global_rounds=2)
+    t = TrainConfig(learning_rate=0.05, batch_size=8, freeze_head=True)
+    return FedSim(CNN_CFG, fed, h, t, batches_per_epoch=1, seed=0,
+                  codecs=codecs, wireless=wireless, **kw)
+
+
+def test_fedsim_identity_codec_trajectory_bit_identical(small_fed):
+    """ISSUE 4 primary acceptance test: the identity codec reproduces the
+    codec-free trajectory bit-for-bit — per-round losses, test metrics, and
+    final parameters — even though it runs the codec-aware step path
+    (per-minibatch keys, offload hook and all)."""
+    base = _fedsim(small_fed).run(rounds=2, log_every=1)
+    ident = _fedsim(small_fed, codecs=link_codecs("fp32")).run(
+        rounds=2, log_every=1)
+    assert base.history == ident.history
+    for a, b in zip(jax.tree.leaves(base.global_params),
+                    jax.tree.leaves(ident.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fedsim_int8_trains_but_differs(small_fed):
+    base = _fedsim(small_fed).run(rounds=2, log_every=1)
+    q = _fedsim(small_fed, codecs=link_codecs("int8")).run(
+        rounds=2, log_every=1)
+    assert q.history[-1]["train_loss"] != base.history[-1]["train_loss"]
+    assert np.isfinite(q.history[-1]["test_loss"])
+    # quantized training still learns: well above the 10-class chance floor
+    assert q.history[-1]["test_acc"] > 0.2
+
+
+# --------------------------------------------- joint (cut, codec) grid -----
+def _grid_controller(policy, deadline=float("inf")):
+    named = {"fp32": None, "int8": link_codecs("int8")}
+    table = comm_table_for_cnn(CNN_CFG, dataset_size=400, batch_size=16,
+                               batches_per_epoch=2, codecs=named)
+    return make_cut_controller(table, 2, policy=policy, deadline_s=deadline)
+
+
+def test_controller_grid_maps_cells_to_cut_and_codec():
+    ctl = _grid_controller("greedy")
+    assert ctl.num_cuts == 6 and ctl.has_codec_grid
+    assert ctl.cut_names == cnn.CUT_CANDIDATES
+    assert ctl.codec_names == ("fp32", "int8")
+    specs = ctl.specs
+    assert {(s.name, s.codec) for s in specs} == \
+        {(c, n) for c in cnn.CUT_CANDIDATES for n in ("fp32", "int8")}
+    np.testing.assert_array_equal(np.sort(ctl.cut_pos), [0, 0, 1, 1, 2, 2])
+    np.testing.assert_array_equal(np.sort(ctl.codec_pos), [0, 0, 0, 1, 1, 1])
+    # a single-codec table has no codec grid
+    plain = make_cut_controller(
+        comm_table_for_cnn(CNN_CFG, dataset_size=400), 2, policy="greedy")
+    assert not plain.has_codec_grid
+    assert plain.codec_names == ("fp32",)
+
+
+def test_grid_deadline_policy_buys_compression_when_rate_drops():
+    """At a generous rate the deepest cut wins regardless of codec; at a
+    starved rate only compressed cells fit the deadline, so the controller
+    pays quantization to stay deep — the joint decision the cut-only
+    controller could not express."""
+    ctl = _grid_controller("deadline", deadline=4.0)
+    rich = ctl.decide(np.array([200e6]), np.array([800e6]), 0.0,
+                      np.array([np.inf]))
+    assert ctl.cut_pos[rich[0]] == 2                  # deepest cut
+    poor = ctl.decide(np.array([4e6]), np.array([16e6]), 0.0,
+                      np.array([np.inf]))
+    spec = ctl.specs[poor[0]]
+    assert spec.codec == "int8"                       # fp32 can't make it
+    # greedy on the same grid picks the global fastest cell, which at a
+    # finite rate is always a compressed one (fewer bits, same latency)
+    g = _grid_controller("greedy")
+    cut = g.decide(np.array([10e6]), np.array([40e6]), 0.0, np.array([np.inf]))
+    assert g.specs[cut[0]].codec == "int8"
+
+
+def test_fixed_cell_selection_on_grid():
+    named = {"fp32": None, "int8": link_codecs("int8")}
+    table = comm_table_for_cnn(CNN_CFG, dataset_size=400, codecs=named)
+    ctl = make_cut_controller(table, 2, policy="fixed",
+                              fixed_cut=("conv2", "int8"))
+    spec = ctl.specs[ctl.fixed_cut]
+    assert (spec.name, spec.codec) == ("conv2", "int8")
+    # a bare cut name picks that cut's first-listed codec
+    ctl2 = make_cut_controller(table, 2, policy="fixed", fixed_cut="conv2")
+    spec2 = ctl2.specs[ctl2.fixed_cut]
+    assert (spec2.name, spec2.codec) == ("conv2", "fp32")
+    with pytest.raises(ValueError):
+        make_cut_controller(table, 2, policy="fixed",
+                            fixed_cut=("conv2", "zip"))
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_scheduler_reports_codec_per_client(seed):
+    cfg = WirelessConfig(model="rayleigh", mean_uplink_mbps=15.0,
+                         mean_downlink_mbps=60.0, latency_s=0.01,
+                         heterogeneity=0.7, deadline_s=2.0,
+                         es_uplink_mbps=30.0, cut_policy="deadline",
+                         cut_candidates=cnn.CUT_CANDIDATES, seed=seed)
+    named = {"fp32": None, "int8": link_codecs("int8")}
+    table = comm_table_for_cnn(CNN_CFG, dataset_size=400, batch_size=16,
+                               batches_per_epoch=2, codecs=named)
+    s = make_scheduler(cfg, 8, kappa0=2, comm_table=table,
+                       es_assign=np.arange(8) // 4)
+    saw_q = False
+    for r in range(4):
+        rep = s.step(r)
+        assert rep.cuts is not None and rep.codecs is not None
+        assert ((rep.cuts >= 0) & (rep.cuts < 3)).all()
+        assert ((rep.codecs >= 0) & (rep.codecs < 2)).all()
+        assert rep.bits_tx >= 0.0
+        saw_q |= bool((rep.codecs == 1).any())
+    assert saw_q, "the grid never chose a compressed cell"
+
+
+# ----------------------------------------------------- contention rules ----
+def test_proportional_fair_weights_shares_by_private_rate():
+    cfg = WirelessConfig(model="static", mean_uplink_mbps=10.0,
+                         heterogeneity=1.0, es_uplink_mbps=20.0,
+                         contention="proportional", seed=3)
+    ch = ChannelModel(cfg, num_clients=8)
+    link = ch.sample(0)
+    es = np.arange(8) // 4
+    active = np.ones(8, bool)
+    eff = ch.contended_uplink(link, active, es)
+    cap = 20e6
+    for b in range(2):
+        grp = es == b
+        r = link.uplink_bps[grp]
+        expect = np.minimum(r, cap * r / r.sum())
+        np.testing.assert_allclose(eff[grp], expect)
+        assert eff[grp].sum() <= cap * (1 + 1e-9)
+    # rates differ across clients (the whole point vs equal split)
+    assert len(np.unique(eff)) > 2
+    # inactive clients keep their private rate
+    active[0] = False
+    eff = ch.contended_uplink(link, active, es)
+    assert eff[0] == link.uplink_bps[0]
+
+
+def test_equal_contention_unchanged_and_validation():
+    cfg = WirelessConfig(model="static", mean_uplink_mbps=10.0,
+                         es_uplink_mbps=20.0, contention="equal")
+    ch = ChannelModel(cfg, num_clients=4)
+    eff = ch.contended_uplink(ch.sample(0), np.ones(4, bool),
+                              np.zeros(4, int))
+    np.testing.assert_allclose(eff, 5e6)
+    with pytest.raises(ValueError, match="contention"):
+        ChannelModel(WirelessConfig(model="static", contention="maxmin"), 4)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_reshare_never_decreases_survivor_rates(seed):
+    """ISSUE 4 satellite: after unaffordable clients withdraw, the second
+    contention pass hands their capacity to the survivors — so for the
+    identical first round, every surviving client's effective uplink under
+    reshare_uplink=True is >= the conservative single pass, and whenever a
+    withdrawal actually happened somebody's rate strictly rises."""
+    def mk(reshare):
+        cfg = WirelessConfig(model="static", mean_uplink_mbps=30.0,
+                             mean_downlink_mbps=120.0, latency_s=0.0,
+                             heterogeneity=1.2, es_uplink_mbps=40.0,
+                             contention="proportional",
+                             energy_budget_j=1.0, tx_power_w=0.5,
+                             reshare_uplink=reshare, seed=seed)
+        comm = comm_for_cnn(CNN_CFG, dataset_size=400, batch_size=16,
+                            batches_per_epoch=2)
+        return make_scheduler(cfg, 8, comm, 2, es_assign=np.arange(8) // 4)
+
+    rep_on, rep_off = mk(True).step(0), mk(False).step(0)
+    np.testing.assert_array_equal(rep_on.scheduled, rep_off.scheduled)
+    surv = rep_on.scheduled
+    assert (rep_on.uplink_bps[surv] >= rep_off.uplink_bps[surv] - 1e-9).all()
+    assert (rep_on.times_s[surv] <= rep_off.times_s[surv] + 1e-12).all()
+    assert rep_on.num_participants >= rep_off.num_participants
+
+
+def test_reshare_strictly_raises_survivor_rate():
+    """Deterministic reshare scenario (trace channel): the fast client can
+    afford its FIRST-pass proportional share, the slow one cannot and
+    withdraws; the second pass hands the whole 30 Mbps pipe to the
+    survivor, whose rate strictly rises above the single-pass share."""
+    def mk(reshare):
+        cfg = WirelessConfig(model="trace", mean_uplink_mbps=100.0,
+                             mean_downlink_mbps=100.0, latency_s=0.0,
+                             trace=((100.0, 18.0),), es_uplink_mbps=30.0,
+                             contention="proportional", energy_budget_j=1.0,
+                             tx_power_w=0.5, reshare_uplink=reshare, seed=0)
+        comm = comm_for_cnn(CNN_CFG, dataset_size=400, batch_size=16,
+                            batches_per_epoch=2)   # 34.66 Mb uplink
+        return make_scheduler(cfg, 2, comm, 2, es_assign=np.zeros(2, int))
+
+    rep_on, rep_off = mk(True).step(0), mk(False).step(0)
+    # both passes agree on WHO survives: the 18 Mbps client's contended
+    # share (30 * 18/118 = 4.6 Mbps) prices it out, the fast one stays
+    for rep in (rep_on, rep_off):
+        np.testing.assert_array_equal(rep.scheduled, [True, False])
+    # single pass: the survivor keeps its first-pass share 30*100/118
+    np.testing.assert_allclose(rep_off.uplink_bps[0], 30e6 * 100 / 118)
+    # reshare: the survivor absorbs the freed capacity -> the full pipe
+    np.testing.assert_allclose(rep_on.uplink_bps[0], 30e6)
+    assert rep_on.uplink_bps[0] > rep_off.uplink_bps[0]
+    assert rep_on.times_s[0] < rep_off.times_s[0]
+
+
+# ------------------------------------------------------ sweep acceptance ---
+def test_compress_sweep_dry_run_int8_beats_fp32():
+    """The benchmark's acceptance bar at tier-1 speed (scheduler only, no
+    training): int8 activations STRICTLY increase scheduled participation
+    over fp32 at the same fixed deadline and energy budget."""
+    sweep = _sweep_module()
+    table = sweep.sweep(None, ["static"], dry_run=True, deadline=1.0,
+                        rounds=2, es_uplink_mbps=40.0, energy_budget=1.0,
+                        seed=0, topk_frac=0.05)
+    rows = {r["codec"]: r for r in table}
+    assert set(rows) == set(CODEC_NAMES)
+    assert rows["int8"]["scheduled_rate"] > rows["fp32"]["scheduled_rate"]
+    assert (rows["int8"]["participation_rate"]
+            > rows["fp32"]["participation_rate"])
+    assert rows["int8"]["total_bits"] < rows["fp32"]["total_bits"] \
+        or rows["fp32"]["total_bits"] == 0.0
+    assert sweep.check_acceptance(table, ["static"])
+
+
+def test_compress_sweep_fedsim_int8_participates_fp32_priced_out(small_fed):
+    """The same bar through the REAL simulator at test scale: with the
+    benchmark's channel, the fp32 contended uplink price exceeds the energy
+    budget (no client ever transmits) while int8 clients are scheduled,
+    make the deadline, and train."""
+    h = HierarchyConfig(num_edge_servers=2, clients_per_es=4, kappa0=2,
+                        kappa1=2, global_rounds=1)
+    t = TrainConfig(learning_rate=0.05, batch_size=16, freeze_head=True)
+    w = WirelessConfig(model="static", mean_uplink_mbps=20.0,
+                       mean_downlink_mbps=80.0, latency_s=0.02,
+                       deadline_s=1.0, es_uplink_mbps=40.0,
+                       energy_budget_j=1.0, seed=0)
+
+    def run(codecs):
+        sim = FedSim(CNN_CFG, small_fed, h, t, batches_per_epoch=2, seed=0,
+                     wireless=w, codecs=codecs)
+        res = sim.run(rounds=1, log_every=1)
+        return res.network
+
+    net_fp = run(None)
+    net_q = run(link_codecs("int8"))
+    sched_fp = sum(n["scheduled"] for n in net_fp)
+    sched_q = sum(n["scheduled"] for n in net_q)
+    parts_q = sum(n["participants"] for n in net_q)
+    assert sched_q > sched_fp
+    assert parts_q > sum(n["participants"] for n in net_fp)
+    assert parts_q > 0
+    assert sum(n["bits"] for n in net_q) < 0.3 * max(
+        sum(n["bits"] for n in net_fp), 1.0) or sched_fp == 0
