@@ -9,11 +9,17 @@ rates, round time, total bits moved.
 
 The acceptance bar of ISSUE 4, checked in-run on the deterministic static
 channel (and at test scale in tests/test_compress.py): int8 activations
-STRICTLY increase scheduled participation over fp32 at the same fixed
-deadline — at the default settings the contended fp32 uplink price
-(~0.87 J/edge round at 10 Mbps effective) burns the 1 J energy budget
-after one round and misses the 1 s deadline anyway, while int8's ~4x
-smaller payload keeps every client affordable and inside the deadline.
+STRICTLY increase PARTICIPATION over fp32 at the same fixed deadline and
+energy budget, without ever being scheduled less.  At the default settings
+the contended fp32 uplink (10 Mbps effective) cannot move the payload
+inside the 1 s deadline: under the deadline-capped energy gate (ISSUE 5)
+those clients are still scheduled — they can afford the capped charge —
+but every transmission is cut off and discarded until the budget drains,
+so fp32 burns its whole budget moving bits that never complete, while
+int8's ~4x smaller payload finishes inside the deadline and aggregates.
+(Before ISSUE 5 the uncapped gate barred fp32 from transmitting at all,
+and scheduled_rate doubled as the bar; with the corrected straggler
+semantics, scheduling no longer implies useful work.)
 
 ``--dry-run`` skips training and drives the ParticipationScheduler alone
 (same channel, same byte accounting) — seconds, not minutes; the tier-1
@@ -121,18 +127,21 @@ def sweep(fed, channels, *, dry_run: bool = False, **kw) -> list[dict]:
 
 
 def check_acceptance(table, channels) -> bool:
-    """int8 must STRICTLY beat fp32 on the static channel; other channels
-    are reported but not enforced (fading can be kind at some seeds)."""
+    """int8 must STRICTLY beat fp32 on PARTICIPATION (and never be
+    scheduled less) on the static channel; other channels are reported but
+    not enforced (fading can be kind at some seeds).  Scheduling alone is
+    no longer the bar: the deadline-capped energy gate schedules fp32
+    stragglers too — they just never complete (see module docstring)."""
     ok = True
     for ch in channels:
         rows = {r["codec"]: r for r in table if r["channel"] == ch}
         fp, q = rows["fp32"], rows["int8"]
-        better = (q["scheduled_rate"] > fp["scheduled_rate"]
-                  and q["participation_rate"] > fp["participation_rate"])
+        better = (q["participation_rate"] > fp["participation_rate"]
+                  and q["scheduled_rate"] >= fp["scheduled_rate"])
         flag = "OK " if better else ("FAIL" if ch == "static" else "warn")
-        print(f"[{flag}] {ch}: int8 scheduled {q['scheduled_rate']:.3f} / "
-              f"part {q['participation_rate']:.3f} vs fp32 "
-              f"{fp['scheduled_rate']:.3f} / {fp['participation_rate']:.3f}")
+        print(f"[{flag}] {ch}: int8 part {q['participation_rate']:.3f} / "
+              f"scheduled {q['scheduled_rate']:.3f} vs fp32 "
+              f"{fp['participation_rate']:.3f} / {fp['scheduled_rate']:.3f}")
         if ch == "static" and not better:
             ok = False
     return ok
@@ -171,7 +180,7 @@ def main(argv=None):
             json.dump(table, f, indent=2)
     if not ok:
         raise SystemExit("ACCEPTANCE FAILED: int8 did not strictly "
-                         "increase scheduled participation over fp32")
+                         "increase participation over fp32")
     return table
 
 

@@ -1,0 +1,205 @@
+"""Compute-heterogeneity x cut-policy sweep: the device model in action.
+
+The wireless simulator priced only *bits* until the device model
+(``repro.wireless.device``) landed: a deeper cut ships fewer activation
+bits but keeps more layers — more FLOPs — on the client.  This sweep runs
+the faithful CNN simulator (FedSim) once per (policy, compute
+heterogeneity sigma) cell at a FINITE per-client compute rate and emits a
+JSON table: mean chosen cut, participation, round time, compute seconds /
+joules, total bits.
+
+The acceptance bar of ISSUE 5, checked in-run on the deterministic static
+channel (and at test scale in tests/test_device.py): as compute
+heterogeneity rises, the ``deadline`` policy steers the slow-device
+clients to SHALLOWER cuts — the mean chosen cut is non-increasing in
+sigma and strictly shallower at the highest sigma than with homogeneous
+devices.  A bits-only controller (``compute_gflops=inf``) cannot see this
+at all: every sigma column would pick the same cut.
+
+``--dry-run`` skips training and drives the ParticipationScheduler alone
+(same channel, same byte+FLOP accounting) — seconds, not minutes; the
+tier-1 smoke test and CI invoke this mode so the benchmark cannot rot.
+
+    PYTHONPATH=src python benchmarks/device_sweep.py \
+        [--compute-gflops 10] [--sigmas 0.0 1.0 2.0] [--deadline 4.0] \
+        [--rounds 2] [--dry-run] [--out device_sweep.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.configs.sweeps import sweep_hierarchy, sweep_train, sweep_wireless
+from repro.core.comm import comm_table_for_cnn
+from repro.core.fedsim import FedSim
+from repro.data.synthetic import make_federated_image_data
+from repro.models.cnn import CUT_CANDIDATES
+from repro.wireless import make_scheduler
+
+POLICIES = ("fixed:conv1", "fixed:fc1", "greedy", "deadline")
+
+
+def _wireless(policy: str, sigma: float, *, channel: str, deadline: float,
+              es_uplink_mbps: float, compute_gflops: float,
+              compute_power_w: float, seed: int):
+    fixed_cut = None
+    if policy.startswith("fixed:"):
+        fixed_cut = policy.split(":", 1)[1]
+        cut_policy, candidates = "fixed", (fixed_cut,)
+    else:
+        cut_policy, candidates = policy, CUT_CANDIDATES
+    return fixed_cut, sweep_wireless(
+        channel, deadline_s=deadline, es_uplink_mbps=es_uplink_mbps,
+        cut_policy=cut_policy, cut_candidates=candidates,
+        compute_gflops=compute_gflops, compute_heterogeneity=sigma,
+        compute_power_w=compute_power_w, seed=seed)
+
+
+def _summarize(policy, sigma, network, h, extra):
+    parts = [n["participants"] for n in network] or [0]
+    times = [n["round_time_s"] for n in network] or [0.0]
+    bits = [n["bits"] for n in network] or [0.0]
+    cuts = [n["mean_cut"] for n in network if "mean_cut" in n]
+    comp = [n.get("compute_s_max", 0.0) for n in network] or [0.0]
+    cj = [n.get("compute_j", 0.0) for n in network] or [0.0]
+    return {
+        "policy": policy, "compute_heterogeneity": sigma,
+        "participation_rate": float(np.mean(parts)) / h.num_clients,
+        "mean_cut": float(np.mean(cuts)) if cuts else 0.0,
+        "mean_round_time_s": float(np.mean(times)),
+        "max_compute_s": float(np.max(comp)),
+        "total_compute_j": float(np.sum(cj)),
+        "total_bits": float(np.sum(bits)), **extra,
+    }
+
+
+def _absolute_cut(row, fixed_cut):
+    """A fixed policy's controller sees a single-candidate table, so its
+    reported mean_cut is position 0 regardless of WHICH cut was pinned;
+    rewrite it as the cut's position in the shared CUT_CANDIDATES axis so
+    the column is comparable across policies."""
+    if fixed_cut is not None:
+        row["mean_cut"] = float(CUT_CANDIDATES.index(fixed_cut))
+    return row
+
+
+def run_one(fed, policy: str, sigma: float, *, rounds: int, seed: int,
+            **kw) -> dict:
+    """One full cell: real training, device-aware wireless accounting."""
+    h = sweep_hierarchy(rounds)
+    t = sweep_train()
+    fixed_cut, wireless = _wireless(policy, sigma, seed=seed, **kw)
+    sim = FedSim(CNN_CFG, fed, h, t, batches_per_epoch=2, seed=seed,
+                 wireless=wireless, cut=fixed_cut)
+    res = sim.run(rounds=rounds, log_every=rounds)
+    return _absolute_cut(_summarize(policy, sigma, res.network, h, {
+        "final_loss": res.history[-1]["test_loss"],
+        "final_acc": res.history[-1]["test_acc"],
+        "total_sim_time_s": res.total_sim_time_s,
+    }), fixed_cut)
+
+
+def dry_run_one(policy: str, sigma: float, *, rounds: int, seed: int,
+                **kw) -> dict:
+    """Scheduler-only cell: same channel + byte/FLOP accounting, no
+    training."""
+    h = sweep_hierarchy(rounds)
+    fixed_cut, wireless = _wireless(policy, sigma, seed=seed, **kw)
+    table = comm_table_for_cnn(CNN_CFG, dataset_size=400,
+                               batch_size=sweep_train().batch_size,
+                               batches_per_epoch=2,
+                               cuts=wireless.cut_candidates)
+    sched = make_scheduler(
+        wireless, h.num_clients, kappa0=h.kappa0, comm_table=table,
+        es_assign=np.arange(h.num_clients) // h.clients_per_es,
+        fixed_cut=fixed_cut if fixed_cut in table else 0)
+    network = []
+    for r in range(rounds * h.kappa1):
+        rep = sched.step(r)
+        row = {"participants": rep.num_participants,
+               "round_time_s": rep.round_time_s, "bits": rep.bits_tx,
+               "compute_s_max": float(rep.compute_s.max()),
+               "compute_j": float(rep.compute_j.sum())}
+        if rep.mean_cut is not None:
+            row["mean_cut"] = rep.mean_cut
+        network.append(row)
+    return _absolute_cut(_summarize(policy, sigma, network, h,
+                                    {"dry_run": True}), fixed_cut)
+
+
+def sweep(fed, sigmas, *, dry_run: bool = False, **kw) -> list[dict]:
+    return [dry_run_one(p, s, **kw) if dry_run else run_one(fed, p, s, **kw)
+            for p in POLICIES for s in sigmas]
+
+
+def check_acceptance(table, sigmas) -> bool:
+    """The deadline policy must steer toward SHALLOWER cuts as compute
+    heterogeneity rises: mean_cut non-increasing in sigma and strictly
+    lower at the top sigma than at sigma=0 (only checkable with a finite
+    compute rate — infinite compute makes every column identical)."""
+    rows = {r["compute_heterogeneity"]: r for r in table
+            if r["policy"] == "deadline"}
+    cuts = [rows[s]["mean_cut"] for s in sigmas]
+    if len(cuts) < 2:
+        print(f"[warn] single sigma {list(sigmas)}: nothing to compare, "
+              f"acceptance not evaluated (mean_cut {cuts[0]:.2f})")
+        return True
+    mono = all(a >= b - 1e-12 for a, b in zip(cuts, cuts[1:]))
+    strict = cuts[-1] < cuts[0]
+    ok = mono and strict
+    print(f"[{'OK ' if ok else 'FAIL'}] deadline mean_cut over sigma "
+          f"{list(sigmas)}: {[f'{c:.2f}' for c in cuts]} "
+          f"(non-increasing={mono}, strictly shallower at top={strict})")
+    return ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--channel", default="static",
+                    choices=["static", "rayleigh"])
+    ap.add_argument("--sigmas", type=float, nargs="+", default=[0.0, 1.0, 2.0],
+                    help="compute-heterogeneity sigmas (sorted ascending "
+                         "before the sweep)")
+    ap.add_argument("--compute-gflops", type=float, default=10.0)
+    ap.add_argument("--compute-power-w", type=float, default=0.2)
+    ap.add_argument("--deadline", type=float, default=4.0)
+    ap.add_argument("--es-uplink-mbps", type=float, default=40.0)
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--alpha", type=float, default=0.3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="scheduler-only sweep: no training, seconds")
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args(argv)
+
+    # the acceptance bar reads the deadline row left-to-right as
+    # "heterogeneity rises", so the sigma axis must be ascending
+    args.sigmas = sorted(args.sigmas)
+    fed = None
+    if not args.dry_run:
+        fed = make_federated_image_data(8, alpha=args.alpha,
+                                        train_per_class=40,
+                                        test_per_class=20, seed=args.seed)
+    table = sweep(fed, args.sigmas, dry_run=args.dry_run,
+                  channel=args.channel, rounds=args.rounds, seed=args.seed,
+                  deadline=args.deadline,
+                  es_uplink_mbps=args.es_uplink_mbps,
+                  compute_gflops=args.compute_gflops,
+                  compute_power_w=args.compute_power_w)
+    print(json.dumps(table, indent=2))
+    ok = check_acceptance(table, args.sigmas)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(table, f, indent=2)
+    if not ok:
+        raise SystemExit("ACCEPTANCE FAILED: deadline policy did not pick "
+                         "shallower cuts as compute heterogeneity rose")
+    return table
+
+
+if __name__ == "__main__":
+    main()

@@ -250,6 +250,11 @@ class WirelessConfig:
     heterogeneity: float = 0.0       # lognormal sigma of a FIXED per-client
     #                                  rate scale (0 -> homogeneous clients)
     trace: tuple[tuple[float, ...], ...] = ()  # (round, client) uplink Mbps
+    trace_down: tuple[tuple[float, ...], ...] = ()  # (round, client) downlink
+    #                                  Mbps (same round-major/cycling rules as
+    #                                  trace); () -> downlink is the uplink
+    #                                  trace rescaled by the configured
+    #                                  downlink/uplink mean ratio (fallback)
     # ---- per-ES shared uplink (contention) ----
     es_uplink_mbps: float = float("inf")  # shared ES uplink capacity, split
     #                                  among that round's scheduled clients
@@ -274,6 +279,17 @@ class WirelessConfig:
     # ---- energy ----
     energy_budget_j: float = float("inf")  # lifetime per-client budget
     tx_power_w: float = 0.5          # uplink transmit power
+    # ---- device (compute) model (repro.wireless.device) ----
+    compute_gflops: float = float("inf")  # per-client compute rate (GFLOP/s);
+    #                                  inf (default) = free compute, i.e. the
+    #                                  bits-only simulator exactly
+    compute_heterogeneity: float = 0.0  # lognormal sigma of a FIXED per-client
+    #                                  compute scale (0 -> identical devices)
+    compute_power_w: float = 0.0     # power drawn while computing (J/s);
+    #                                  joins tx energy in the budget gate
+    codec_cycles_per_element: float = 0.0  # FLOPs a client spends per element
+    #                                  crossing a LOSSY codec (encode up,
+    #                                  decode down); 0 = codecs compute-free
     seed: int = 0
 
 

@@ -45,6 +45,9 @@ class CommModel:
     client_params: int = 0       # Z_0
     total_params: int = 0        # Z
     dataset_size: int = 1        # |D_u,ft|
+    client_flops_per_sample: float = 0.0  # training (fwd+bwd) FLOPs the
+    #                              client block burns per sample at this cut
+    #                              (the device model's compute twin of Z_c)
     # per-payload codecs (None = the paper's (omega+1)-bit accounting)
     act_codec: Optional["Codec"] = None    # o_fp, client -> ES
     grad_codec: Optional["Codec"] = None   # o_bp, ES -> client
@@ -114,11 +117,14 @@ def comm_for_cnn(cfg, dataset_size: int, *, omega: int = 32,
         lambda k: cnn_mod.init(k, cfg), jax.random.PRNGKey(0))
     counts = count_parts(params, split_spec_for(cfg, cut))
     z_c = cnn_mod.cut_activation_size(cfg, 1, cut)
+    from repro.utils.flops import training_flops
+    flops = training_flops(cnn_mod.client_block_flops(cfg, 1, cut))
     return CommModel(omega=omega, batch_size=batch_size,
                      batches_per_epoch=batches_per_epoch, cut_size=z_c,
                      client_params=counts["client"],
                      total_params=sum(counts.values()),
-                     dataset_size=dataset_size, **_codec_fields(codecs))
+                     dataset_size=dataset_size,
+                     client_flops_per_sample=flops, **_codec_fields(codecs))
 
 
 def comm_for_lm(cfg, seq_len: int, dataset_size: int, *, omega: int = 16,
@@ -150,11 +156,16 @@ def comm_for_lm(cfg, seq_len: int, dataset_size: int, *, omega: int = 16,
     params = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
     counts = count_parts(params, split_spec_for(cfg))
     z_c = seq_len * cfg.d_model            # cut activations per sample
+    # the standard 6ND training estimate over the client block's params,
+    # per sample = seq_len tokens (utils.flops.dense_model_flops)
+    from repro.utils.flops import dense_model_flops
+    flops = dense_model_flops(counts["client"], seq_len)
     return CommModel(omega=omega, batch_size=batch_size,
                      batches_per_epoch=batches_per_epoch, cut_size=z_c,
                      client_params=counts["client"],
                      total_params=sum(counts.values()),
-                     dataset_size=dataset_size, **_codec_fields(codecs))
+                     dataset_size=dataset_size,
+                     client_flops_per_sample=flops, **_codec_fields(codecs))
 
 
 def _cross_codecs(cuts, codecs, one_cell):

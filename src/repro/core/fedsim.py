@@ -146,9 +146,13 @@ class FedSim:
         if wireless is not None and wireless.model != "ideal":
             from repro.core.comm import comm_for_cnn, comm_table_for_cnn
             from repro.wireless import make_scheduler
-            mean_size = int(np.mean([len(i) for i in data.train_indices]))
+            # Eq. 17 is an UPPER bound, so the shared byte accounting must
+            # price the index payload ceil(log2 |D_u|) at the LARGEST client
+            # dataset — the mean silently undercounts for every bigger-than-
+            # average client under a skewed Dirichlet split (alpha << 1)
+            max_size = int(max(len(i) for i in data.train_indices))
             es_assign = np.arange(hcfg.num_clients) // hcfg.clients_per_es
-            kw = dict(dataset_size=max(mean_size, 2),
+            kw = dict(dataset_size=max(max_size, 2),
                       batch_size=tcfg.batch_size,
                       batches_per_epoch=batches_per_epoch,
                       codecs=self.codecs)
@@ -412,6 +416,9 @@ class FedSim:
                            "bits": rep.bits_tx}
                     if rep.mean_cut is not None:
                         row["mean_cut"] = rep.mean_cut
+                    if rep.compute_s is not None and rep.compute_s.any():
+                        row["compute_s_max"] = float(rep.compute_s.max())
+                        row["compute_j"] = float(rep.compute_j.sum())
                     res.network.append(row)
                     stacked = self._edge_aggregate(stacked, mask=rep.mask,
                                                    fallback=prev)

@@ -98,6 +98,20 @@ def main(argv=None):
     ap.add_argument("--cut-candidates", type=int, nargs="+", default=None,
                     help="candidate client depths (n_client_layers), "
                          "shallow to deep; default: the model's depth only")
+    # ---- device (compute) model (repro.wireless.device) ----
+    ap.add_argument("--compute-gflops", type=float, default=float("inf"),
+                    help="per-client compute rate in GFLOP/s; client-block "
+                         "FLOPs then cost round time and energy (inf = "
+                         "free compute, the bits-only accounting)")
+    ap.add_argument("--compute-heterogeneity", type=float, default=0.0,
+                    help="lognormal sigma of a fixed per-client compute "
+                         "scale (0 = identical devices)")
+    ap.add_argument("--compute-power-w", type=float, default=0.0,
+                    help="power drawn while computing; joins tx energy in "
+                         "the per-client budget gate")
+    ap.add_argument("--codec-cycles", type=float, default=0.0,
+                    help="FLOPs per element crossing a lossy codec "
+                         "(encode/decode compute; 0 = codecs compute-free)")
     # ---- compression (repro.compress) ----
     ap.add_argument("--codec", default="fp32",
                     choices=["fp32", "int8", "int4", "topk", "fp8"],
@@ -152,6 +166,10 @@ def main(argv=None):
                               es_uplink_mbps=args.es_uplink_mbps,
                               cut_policy=args.cut_policy,
                               cut_candidates=candidates,
+                              compute_gflops=args.compute_gflops,
+                              compute_heterogeneity=args.compute_heterogeneity,
+                              compute_power_w=args.compute_power_w,
+                              codec_cycles_per_element=args.codec_cycles,
                               seed=args.seed)
         comm_kw = dict(seq_len=args.seq,
                        dataset_size=args.rounds * args.local_steps *
@@ -217,6 +235,8 @@ def main(argv=None):
                 extra = {}
                 if rep.mean_cut is not None:
                     extra["mean_cut"] = rep.mean_cut
+                if rep.compute_s is not None and rep.compute_s.any():
+                    extra["compute_s_max"] = float(rep.compute_s.max())
                 log.log(step=r, loss=metrics["loss"],
                         participants=rep.num_participants,
                         round_time_s=rep.round_time_s,

@@ -147,3 +147,26 @@ def cut_activation_size(cfg: CNNConfig, batch: int,
     if cut == "fc1":
         return batch * cfg.fc_hidden
     raise ValueError(f"unknown cut {cut!r}; candidates: {CUT_CANDIDATES}")
+
+
+def client_block_flops(cfg: CNNConfig, batch: int,
+                       cut: str = DEFAULT_CUT) -> int:
+    """Forward FLOPs of the client block w_{u,0} at ``cut`` for one
+    mini-batch — the compute twin of :func:`cut_activation_size` (Remark 1
+    prices the bits a cut moves; the wireless device model prices the FLOPs
+    it keeps on the client).  Convolutions are priced per output position,
+    so a deeper cut costs the client an order of magnitude more compute
+    even though its activation tensor shrinks."""
+    from repro.utils.flops import conv2d_flops, dense_layer_flops
+
+    s = cfg.image_size
+    f = conv2d_flops(batch, s, s, 3, cfg.channels, cfg.conv1_filters)
+    if cut == "conv1":
+        return f
+    s2 = s // 2
+    f += conv2d_flops(batch, s2, s2, 3, cfg.conv1_filters, cfg.conv2_filters)
+    if cut == "conv2":
+        return f
+    if cut == "fc1":
+        return f + dense_layer_flops(batch, cfg.flat_dim, cfg.fc_hidden)
+    raise ValueError(f"unknown cut {cut!r}; candidates: {CUT_CANDIDATES}")

@@ -23,3 +23,24 @@ def attention_flops(batch: int, q_len: int, kv_len: int, num_heads: int,
     """QK^T + AV flops for (possibly rectangular) attention."""
     f = 2 * batch * num_heads * q_len * kv_len * head_dim * 2  # qk and av
     return f * 3 if backward else f
+
+
+def conv2d_flops(batch: int, out_h: int, out_w: int, kernel: int,
+                 cin: int, cout: int) -> int:
+    """FLOPs of one 2-D convolution producing a (batch, out_h, out_w, cout)
+    map from a kernel x kernel window over cin channels (multiply-adds as 2).
+    Unlike a dense layer, the weights are reused at every output position,
+    so this is NOT 2 * params * batch — which is why the wireless device
+    model cannot price the CNN's client block from Z_0 alone."""
+    return 2 * batch * out_h * out_w * kernel * kernel * cin * cout
+
+
+def dense_layer_flops(batch: int, din: int, dout: int) -> int:
+    """Forward FLOPs of a (batch, din) @ (din, dout) dense layer."""
+    return matmul_flops(batch, din, dout)
+
+
+def training_flops(forward_flops: int) -> int:
+    """fwd + bwd at the standard 1:2 ratio (same rule as the 6ND estimate:
+    2ND forward, 4ND backward)."""
+    return 3 * forward_flops

@@ -24,8 +24,11 @@ Channel (``repro.wireless.channel.ChannelModel``):
 - ``heterogeneity``: sigma of a lognormal per-client rate scale drawn once
   at construction — 0 means all clients statistically identical.
 - ``trace``: round-major tuple of per-client uplink-Mbps tuples (cycled
-  over rounds, resized over clients); downlink scales by the configured
-  downlink/uplink ratio.
+  over rounds, resized over clients).
+- ``trace_down``: optional round-major downlink trace (same shape rules);
+  without one the downlink FALLS BACK to the uplink trace rescaled by the
+  configured downlink/uplink mean ratio (fabricated, perfectly-correlated
+  fading — record a real pair whenever asymmetry matters).
 - ``es_uplink_mbps``: SHARED uplink capacity of each edge server.  The
   scheduled clients of one ES split it — each gets the smaller of its
   private rate and its share, so the per-ES aggregate rate never exceeds
@@ -54,6 +57,35 @@ Cut selection (``repro.wireless.cutter.CutController``):
   the controller searches the flat cell list under the same policies and
   ``RoundReport.codecs`` carries each client's chosen codec.
 
+Device / compute (``repro.wireless.device.DeviceModel``):
+
+- ``compute_gflops``: per-client compute rate in GFLOP/s.  The device model
+  converts each round's client-side workload — ``client_round_flops``:
+  kappa0 local epochs of client-block forward+backward at the chosen cut
+  (per-cut conv/dense counts from ``repro.utils.flops`` via
+  ``CommModel.client_flops_per_sample``) plus codec encode/decode work —
+  into per-round compute TIME (added to the round time the deadline gates
+  on) and ENERGY (added to the transmit joules the budget gates on).
+  ``inf`` (default) zeroes every compute term: the bits-only simulator,
+  bit-for-bit.
+- ``compute_heterogeneity``: lognormal sigma of a FIXED per-client compute
+  scale (the compute twin of ``heterogeneity``; drawn once from an RNG
+  stream disjoint from the channel's, so enabling it never perturbs fading).
+- ``compute_power_w``: power drawn while computing; a scheduled client is
+  charged ``compute_power_w * compute_s + tx_power_w * tx_s``, both capped
+  at the deadline (see the scheduler docstring's straggler semantics).
+- ``codec_cycles_per_element``: FLOPs per element crossing a LOSSY codec on
+  the client (activations encoded up and gradients decoded down each
+  minibatch, the client block encoded/decoded at the offload boundary) —
+  the codec-aware energy model; 0 keeps codecs compute-free.
+
+With finite compute the cut controller prices every (cut, codec) cell's
+FLOPs next to its bits, so ``greedy``/``deadline`` see the full ASFL
+trade-off: a deep cut ships fewer activation bits but burns more client
+FLOPs, and a compute-starved client is steered to a shallower cut than its
+fast-channel peer (``examples/device_aware_cut.py``,
+``benchmarks/device_sweep.py``).
+
 Participation (``repro.wireless.scheduler.ParticipationScheduler``):
 
 - ``deadline_s``: edge-round deadline; a scheduled client whose simulated
@@ -81,11 +113,13 @@ from repro.wireless.channel import (ChannelModel, LinkState, RoundBits,
                                     client_round_bits)
 from repro.wireless.cutter import (CutController, CutSpec, cut_specs,
                                    make_cut_controller)
+from repro.wireless.device import DeviceModel, client_round_flops
 from repro.wireless.scheduler import ParticipationScheduler, RoundReport
 
 __all__ = [
     "ChannelModel", "LinkState", "RoundBits", "client_round_bits",
     "CutController", "CutSpec", "cut_specs", "make_cut_controller",
+    "DeviceModel", "client_round_flops",
     "ParticipationScheduler", "RoundReport", "make_scheduler",
 ]
 
@@ -99,14 +133,22 @@ def make_scheduler(cfg, num_clients: int, comm=None, kappa0: int = 1, *,
     from ``comm_table_for_cnn``/``comm_table_for_lm`` — in which case a
     :class:`CutController` with policy ``cfg.cut_policy`` prices the cuts
     per round.  ``es_assign`` maps each client to its edge server for the
-    shared-uplink contention (default: all clients on one ES).
+    shared-uplink contention (default: all clients on one ES).  A
+    :class:`DeviceModel` built from the same config prices client compute
+    alongside the bits (free when ``compute_gflops`` is inf).
     """
     channel = ChannelModel(cfg, num_clients)
+    device = DeviceModel(cfg, num_clients)
     if comm_table is not None:
         cutter = make_cut_controller(
             comm_table, kappa0, policy=cfg.cut_policy, fixed_cut=fixed_cut,
-            deadline_s=cfg.deadline_s, tx_power_w=cfg.tx_power_w)
+            deadline_s=cfg.deadline_s, tx_power_w=cfg.tx_power_w,
+            compute_power_w=cfg.compute_power_w,
+            codec_cycles_per_element=cfg.codec_cycles_per_element)
         return ParticipationScheduler(cfg, channel, cutter=cutter,
-                                      es_assign=es_assign)
+                                      es_assign=es_assign, device=device)
     bits = client_round_bits(comm, kappa0)
-    return ParticipationScheduler(cfg, channel, bits, es_assign=es_assign)
+    flops = client_round_flops(
+        comm, kappa0, codec_cycles_per_element=cfg.codec_cycles_per_element)
+    return ParticipationScheduler(cfg, channel, bits, es_assign=es_assign,
+                                  device=device, flops=flops)

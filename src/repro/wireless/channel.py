@@ -13,7 +13,10 @@ ENERGIES.  Three rate processes are supported:
                 POWER exponential, and we model the achievable rate as
                 proportional to it (interference-limited linear regime);
 - ``trace``:    rate_u(t) read from ``WirelessConfig.trace`` (round-major,
-                cycled), for replaying measured traces;
+                cycled), for replaying measured traces.  The downlink comes
+                from ``WirelessConfig.trace_down`` (same shape rules) when
+                recorded; without one it FALLS BACK to the uplink trace
+                rescaled by the configured mean downlink/uplink ratio;
 - ``ideal``:    infinite rates, zero latency — the pre-wireless simulator.
 
 All rates are in Mbps in the config and bits/s internally.
@@ -76,6 +79,14 @@ class ChannelModel:
             raise ValueError(f"unknown channel model {cfg.model!r}")
         if cfg.model == "trace" and not cfg.trace:
             raise ValueError("trace channel requires WirelessConfig.trace")
+        if (cfg.model == "trace" and cfg.trace_down
+                and len(cfg.trace_down) != len(cfg.trace)):
+            # both traces cycle modulo their own length; unequal lengths
+            # would silently desynchronize the measured (up, down) pairs
+            raise ValueError(
+                f"trace_down has {len(cfg.trace_down)} rounds but trace has "
+                f"{len(cfg.trace)}; a measured pair must align round-for-"
+                f"round (both cycle together)")
         if cfg.contention not in ("equal", "proportional"):
             raise ValueError(f"unknown contention rule {cfg.contention!r}; "
                              f"one of ('equal', 'proportional')")
@@ -106,6 +117,16 @@ class ChannelModel:
             fade = np.resize(row, U) * 1e6 / up_mean  # trace IS the uplink
         up = np.maximum(up_mean * self._scale * fade, 1.0)
         down = np.maximum(down_mean * self._scale * fade, 1.0)
+        if cfg.model == "trace" and cfg.trace_down:
+            # a measured downlink trace (round-major, cycled, resized — the
+            # same shape rules as ``trace``) is honored as-is.  Without one,
+            # the ``down`` above is the documented FALLBACK: the uplink
+            # trace rescaled by the configured mean downlink/uplink ratio —
+            # fabricated fading perfectly correlated with the uplink; record
+            # a trace_down pair whenever up/down asymmetry matters.
+            drow = np.asarray(
+                cfg.trace_down[round_idx % len(cfg.trace_down)], float)
+            down = np.maximum(np.resize(drow, U) * 1e6 * self._scale, 1.0)
         return LinkState(up, down, np.full(U, cfg.latency_s))
 
     # -------------------------------------------------------- contention --
@@ -149,7 +170,12 @@ class ChannelModel:
         return 2 * link.latency_s + t_up + t_down
 
     def round_energy_j(self, link: LinkState, bits: RoundBits) -> np.ndarray:
-        """Per-client uplink transmit energy (P_tx * airtime)."""
+        """Per-client uplink transmit energy (P_tx * airtime), UNCAPPED.
+
+        This is the full-transmission estimate; the scheduler's
+        authoritative charge is its deadline-capped ``_charge`` (which also
+        adds compute joules) — see the scheduler docstring's straggler
+        semantics."""
         with np.errstate(divide="ignore"):
             t_up = bits.uplink / link.uplink_bps
         return self.cfg.tx_power_w * np.where(np.isfinite(t_up), t_up, 0.0)

@@ -25,6 +25,13 @@ greedy/deadline policies — compression is just more candidate cells with
 fewer bits.  ``cut_pos``/``codec_pos`` map the chosen cell index back to
 its cut depth and codec so reports stay interpretable.
 
+Every cell also carries its client-side FLOPs (``CutSpec.flops``, from
+``repro.wireless.device.client_round_flops``): given a device model's
+``sec_per_flop``, ``decide`` prices each candidate's COMPUTE time and
+energy next to its bits — the full ASFL computation+communication
+trade-off, under which a deep cut's smaller activation tensor is no longer
+free for a compute-starved client.
+
 The controller is stateless: :class:`~repro.wireless.scheduler.
 ParticipationScheduler` calls :meth:`CutController.decide` twice per round —
 once on the private (uncontended) rates to make scheduling decisions, and
@@ -52,20 +59,30 @@ class CutSpec:
     z0: int                  # Z_0: client-block parameters
     z_c: int                 # Z_c: cut-layer activation elements per sample
     codec: str = "fp32"      # codec-set name ("fp32" = uncompressed)
+    flops: float = 0.0       # per-edge-round client compute at this cell
+    #                          (client-block training + codec work)
 
 
-def cut_specs(comms: dict, kappa0: int) -> tuple[CutSpec, ...]:
+def cut_specs(comms: dict, kappa0: int, *,
+              codec_cycles_per_element: float = 0.0) -> tuple[CutSpec, ...]:
     """Build the candidate list from a per-cut CommModel table (the output
     of ``comm_table_for_cnn`` / ``comm_table_for_lm``), preserving its
     shallow-to-deep order.  Tables built with a codecs dict key their cells
-    ``(cut, codec_name)``; plain tables get the ``"fp32"`` codec label."""
+    ``(cut, codec_name)``; plain tables get the ``"fp32"`` codec label.
+    Each cell also carries its client-side FLOPs so the controller can price
+    compute alongside bits (``repro.wireless.device``)."""
+    from repro.wireless.device import client_round_flops
+
     specs = []
     for key, cm in comms.items():
         assert isinstance(cm, CommModel)
         name, codec = key if isinstance(key, tuple) else (key, "fp32")
-        specs.append(CutSpec(name=name, bits=client_round_bits(cm, kappa0),
-                             z0=cm.client_params, z_c=cm.cut_size,
-                             codec=codec))
+        specs.append(CutSpec(
+            name=name, bits=client_round_bits(cm, kappa0),
+            z0=cm.client_params, z_c=cm.cut_size, codec=codec,
+            flops=client_round_flops(
+                cm, kappa0,
+                codec_cycles_per_element=codec_cycles_per_element)))
     return tuple(specs)
 
 
@@ -74,7 +91,7 @@ class CutController:
 
     def __init__(self, specs: tuple[CutSpec, ...], policy: str = "fixed", *,
                  fixed_cut: int = 0, deadline_s: float = float("inf"),
-                 tx_power_w: float = 0.5):
+                 tx_power_w: float = 0.5, compute_power_w: float = 0.0):
         if policy not in POLICIES:
             raise ValueError(f"unknown cut policy {policy!r}; one of {POLICIES}")
         if not specs:
@@ -87,8 +104,10 @@ class CutController:
         self.fixed_cut = fixed_cut
         self.deadline_s = deadline_s
         self.tx_power_w = tx_power_w
+        self.compute_power_w = compute_power_w
         self.up_bits = np.array([s.bits.uplink for s in specs], np.float64)
         self.down_bits = np.array([s.bits.downlink for s in specs], np.float64)
+        self.flops = np.array([s.flops for s in specs], np.float64)
         # joint (cut, codec) grids: map each spec index back to its cut
         # position (shallow -> deep) and its codec position, so reports can
         # say WHICH split and WHICH codec a client got, not just the cell
@@ -113,9 +132,20 @@ class CutController:
         return RoundBits(uplink=self.up_bits[cuts],
                          downlink=self.down_bits[cuts])
 
+    def flops_for(self, cuts: np.ndarray) -> np.ndarray:
+        """Per-client client-side FLOPs for a cut-index vector."""
+        return self.flops[np.asarray(cuts, int)]
+
     # ------------------------------------------------------------ policy --
-    def _estimates(self, up_bps, down_bps, latency_s):
-        """(num_cuts, U) estimated round time and uplink energy matrices."""
+    def _estimates(self, up_bps, down_bps, latency_s, sec_per_flop=None):
+        """(num_cuts, U) estimated round time and client energy matrices.
+
+        ``sec_per_flop`` (a (U,) array from ``DeviceModel.sec_per_flop``)
+        prices each cell's client-side COMPUTE alongside its bits: a deeper
+        cut ships fewer activation bits but burns more client FLOPs, and
+        only with both terms does the controller see the full ASFL
+        trade-off.  ``None`` (or all-zero, i.e. infinite compute) reproduces
+        the bits-only estimates exactly."""
         with np.errstate(divide="ignore", invalid="ignore"):
             t_up = self.up_bits[:, None] / up_bps[None, :]
             t_down = self.down_bits[:, None] / down_bps[None, :]
@@ -123,17 +153,25 @@ class CutController:
         t_down = np.nan_to_num(t_down, nan=0.0)
         times = 2 * np.asarray(latency_s)[None, :] + t_up + t_down
         energy = self.tx_power_w * t_up
+        if sec_per_flop is not None:
+            t_comp = self.flops[:, None] * np.asarray(sec_per_flop)[None, :]
+            times = times + t_comp
+            energy = energy + self.compute_power_w * t_comp
         return times, energy
 
-    def decide(self, up_bps, down_bps, latency_s, energy_left) -> np.ndarray:
+    def decide(self, up_bps, down_bps, latency_s, energy_left,
+               sec_per_flop=None) -> np.ndarray:
         """Per-client candidate index under the configured policy.
 
         All policies fall back in two stages when their primary criterion is
         infeasible: an unaffordable/deadline-missing client first takes the
         fastest affordable cut, and a client that can afford NO cut takes
-        the one with the least uplink energy (it will then be dropped by the
-        scheduler's energy gate — the choice only has to be sane, not
-        feasible).
+        the one with the least estimated energy (tx + compute joules at the
+        full, uncapped workload).  The scheduler's gate then re-judges that
+        pick against the DEADLINE-CAPPED charge it would actually deduct —
+        a cell unaffordable at full airtime may still be scheduled as a
+        straggler it can afford — so the choice here only has to be sane,
+        not feasible.
         """
         U = np.asarray(up_bps).shape[0]
         if self.policy == "fixed" or self.num_cuts == 1:
@@ -141,7 +179,8 @@ class CutController:
         times, energy = self._estimates(np.asarray(up_bps, float),
                                         np.asarray(down_bps, float),
                                         np.broadcast_to(
-                                            np.asarray(latency_s, float), (U,)))
+                                            np.asarray(latency_s, float), (U,)),
+                                        sec_per_flop)
         affordable = energy <= np.asarray(energy_left, float)[None, :]
         t_aff = np.where(affordable, times, np.inf)
         fastest_aff = np.argmin(t_aff, axis=0)     # greedy's primary answer
@@ -164,7 +203,9 @@ class CutController:
 def make_cut_controller(comms: dict, kappa0: int, *, policy: str = "fixed",
                         fixed_cut: int | str = 0,
                         deadline_s: float = float("inf"),
-                        tx_power_w: float = 0.5) -> CutController:
+                        tx_power_w: float = 0.5,
+                        compute_power_w: float = 0.0,
+                        codec_cycles_per_element: float = 0.0) -> CutController:
     """Convenience: per-cut CommModel table -> controller.
 
     ``fixed_cut`` may be a candidate NAME (e.g. ``"conv1"``, an LM depth, or
@@ -172,7 +213,8 @@ def make_cut_controller(comms: dict, kappa0: int, *, policy: str = "fixed",
     over index interpretation) instead of an index.  A bare cut name against
     a codec grid picks that cut's FIRST-listed codec.
     """
-    specs = cut_specs(comms, kappa0)
+    specs = cut_specs(comms, kappa0,
+                      codec_cycles_per_element=codec_cycles_per_element)
     cells = [(s.name, s.codec) for s in specs]
     names = [s.name for s in specs]
     if fixed_cut in cells:
@@ -182,4 +224,5 @@ def make_cut_controller(comms: dict, kappa0: int, *, policy: str = "fixed",
     elif not (isinstance(fixed_cut, int) and 0 <= fixed_cut < len(specs)):
         raise ValueError(f"fixed_cut {fixed_cut!r} not among {cells}")
     return CutController(specs, policy, fixed_cut=fixed_cut,
-                         deadline_s=deadline_s, tx_power_w=tx_power_w)
+                         deadline_s=deadline_s, tx_power_w=tx_power_w,
+                         compute_power_w=compute_power_w)

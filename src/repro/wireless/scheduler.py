@@ -3,10 +3,14 @@
 The scheduler composes three gates, applied in order, and emits a 0/1
 participation mask per edge round:
 
-1. **energy**  — a client skips any round whose uplink energy it can no
-   longer afford (budgets deplete by P_tx * uplink airtime each round the
-   client participates and never recharge; under a fading channel a client
-   priced out of a deep-fade round may still afford a later cheap one);
+1. **energy**  — a client skips any round whose energy it can no longer
+   afford (budgets deplete each round the client transmits and never
+   recharge; under a fading channel a client priced out of a deep-fade
+   round may still afford a later cheap one).  The gate compares the budget
+   against the DEADLINE-CAPPED charge the client would actually pay (see
+   "straggler semantics" below) — gating on the uncapped full airtime would
+   silently bar a client that can afford the capped charge while a richer
+   client is scheduled and burns exactly that capped amount;
 2. **selection** — an optional scheduling cap: ``topk`` keeps the k
    fastest affordable clients (rate-aware scheduling), ``random`` thins
    them i.i.d. with ``participation_prob`` (unbiased client sampling);
@@ -32,10 +36,44 @@ Two optional refinements sit between gates 2 and 3:
   first-pass rates (the freed capacity only speeds them up).
   ``reshare_uplink=False`` reproduces the conservative single pass.
 
-Energy accounting: every client that TRANSMITS pays for the airtime it
-actually burns — a scheduled client that misses the deadline transmitted
-until the deadline cut it off, so it pays P_tx * min(uplink airtime,
-deadline) even though its update is discarded.
+A per-client **device model** (``repro.wireless.device``) adds client-side
+COMPUTE to every decision: the round time is compute + channel time, the
+energy charge is compute joules + transmit joules, and adaptive cut
+policies price each candidate's FLOPs next to its bits — so a deep cut's
+smaller activation tensor no longer looks free on a compute-starved
+client.  ``compute_gflops=inf`` (the default) zeroes every compute term:
+the pre-device scheduler bit-for-bit, EXCEPT where the straggler-semantics
+bugfixes below intentionally changed the accounting (the deadline-capped
+energy gate and the moved-bits ledger differ from the old code whenever
+``deadline_s`` is finite; the golden regression pins the inf-deadline
+scenarios where no fix applies).
+
+Straggler semantics (the single source of truth for gate, charge, and
+traffic accounting): a scheduled client first COMPUTES (kappa0 local
+epochs of client-block work at ``compute_power_w``), then TRANSMITS (at
+``tx_power_w``) until it finishes or the deadline cuts it off.  Its
+deadline-capped activity is therefore
+
+    compute_s = min(full compute time, deadline)
+    tx_s      = min(uplink airtime, max(deadline - compute time, 0))
+
+(deliberately latency-free, like the pre-device straggler charge and the
+Eq.-17 traffic terms: latency is charged on the round CLOCK, not against
+the transmit window, so the capped window slightly over-credits a
+straggler whose deadline slack is mostly propagation delay)
+
+and the energy charge is ``compute_power_w * compute_s + tx_power_w *
+tx_s`` — paid by EVERY scheduled client, deadline-missing stragglers
+included (their update is discarded but the joules are spent).  The energy
+gate admits exactly the clients whose budget covers this charge, so the
+gate and the deduction can never disagree and budgets never go negative.
+A client whose compute alone consumes the whole deadline window (tx window
+zero) is never scheduled at all: it could not push a single bit before the
+cutoff, so scheduling it would only burn a contention share and pin the
+round clock at the deadline.
+``RoundReport.bits_tx`` counts the bits that actually MOVED: a straggler
+moved only ``uplink_bps * tx_s`` uplink bits and never received its
+downlink, so it contributes that, not its full offered up+down traffic.
 
 The simulated edge-round wall clock is the slowest scheduled client's time
 when every scheduled client made the deadline, else the full deadline (the
@@ -51,6 +89,7 @@ import numpy as np
 
 from repro.configs.base import WirelessConfig
 from repro.wireless.channel import ChannelModel, LinkState, RoundBits
+from repro.wireless.device import DeviceModel
 
 
 @dataclass
@@ -58,7 +97,8 @@ class RoundReport:
     """What the network did in one edge round."""
     round_idx: int
     mask: np.ndarray           # (U,) float64 in {0, 1}
-    times_s: np.ndarray        # (U,) per-client completion time
+    times_s: np.ndarray        # (U,) per-client completion time (compute +
+    #                            latency + airtime)
     round_time_s: float        # simulated wall clock of this edge round
     energy_left_j: np.ndarray  # (U,) remaining budgets AFTER this round
     scheduled: np.ndarray = None   # (U,) bool: transmitted this round
@@ -67,8 +107,15 @@ class RoundReport:
     codecs: np.ndarray = None      # (U,) int codec indices into the
     #                                controller's codec_names (None unless a
     #                                cut x codec grid is in play)
-    bits_tx: float = 0.0           # total offered traffic (up+down bits) of
-    #                                this round's scheduled clients
+    bits_tx: float = 0.0           # total bits actually MOVED this round by
+    #                                scheduled clients (a deadline-cut
+    #                                straggler counts only the uplink bits
+    #                                it pushed before the cutoff, and no
+    #                                downlink)
+    compute_s: np.ndarray = None   # (U,) per-client local compute time of
+    #                                this round's workload (device model)
+    compute_j: np.ndarray = None   # (U,) compute joules actually charged
+    #                                (zero for unscheduled clients)
 
     @property
     def num_participants(self) -> int:
@@ -91,7 +138,8 @@ class ParticipationScheduler:
 
     def __init__(self, cfg: WirelessConfig, channel: ChannelModel,
                  bits: RoundBits | None = None, *, cutter=None,
-                 es_assign: np.ndarray | None = None):
+                 es_assign: np.ndarray | None = None,
+                 device: DeviceModel | None = None, flops: float = 0.0):
         if cfg.selection not in ("deadline", "topk", "random"):
             raise ValueError(f"unknown selection policy {cfg.selection!r}")
         if (bits is None) == (cutter is None):
@@ -101,6 +149,11 @@ class ParticipationScheduler:
         self.bits = bits
         self.cutter = cutter
         self.U = channel.U
+        # device (compute) model; ``flops`` is the fixed-bits path's per-round
+        # client workload (the cutter path carries per-cell FLOPs itself)
+        self.device = device if device is not None else DeviceModel(cfg,
+                                                                    self.U)
+        self.flops = flops
         # ES attachment for the shared-uplink contention; default: one pool
         self.es_assign = (np.zeros(self.U, int) if es_assign is None
                           else np.asarray(es_assign, int))
@@ -113,18 +166,49 @@ class ParticipationScheduler:
         if self.cutter is None:
             return self.bits, None
         cuts = self.cutter.decide(up_bps, down_bps, latency_s,
-                                  self.energy_left)
+                                  self.energy_left,
+                                  self.device.sec_per_flop)
         return self.cutter.bits_for(cuts), cuts
+
+    def _compute_s(self, cuts) -> np.ndarray:
+        """Per-client local compute time of this round's workload."""
+        flops = self.flops if cuts is None else self.cutter.flops_for(cuts)
+        return np.broadcast_to(self.device.compute_time_s(flops), (self.U,))
+
+    def _charge(self, link: LinkState, bits: RoundBits, comp_s: np.ndarray):
+        """Deadline-capped (charge, tx_s, comp_charged_s, can_tx) per client.
+
+        The straggler semantics of the module docstring: compute first,
+        transmit until done or cut off, pay for both.  This one quantity
+        drives the energy GATE, the energy DEDUCTION, and the moved-bits
+        accounting, so they can never disagree.  ``can_tx`` is False for a
+        client whose compute alone consumes the whole deadline window — it
+        could not push a single bit before the cutoff, so scheduling it
+        would only burn a contention share and pin the round clock (at
+        ``compute_power_w=0`` its charge is 0, so without this flag the
+        energy gate would schedule it forever).
+        """
+        cfg = self.cfg
+        with np.errstate(divide="ignore"):
+            t_up = np.asarray(bits.uplink, float) / link.uplink_bps
+        t_up = np.where(np.isfinite(t_up), t_up, 0.0)
+        c_s = np.minimum(comp_s, cfg.deadline_s)
+        window = np.maximum(cfg.deadline_s - comp_s, 0.0)
+        tx_s = np.minimum(t_up, window)
+        charge = cfg.tx_power_w * tx_s + cfg.compute_power_w * c_s
+        return charge, tx_s, c_s, window > 0
 
     def step(self, round_idx: int) -> RoundReport:
         cfg = self.cfg
         link = self.channel.sample(round_idx)
         bits, cuts = self._bits_cuts(link.uplink_bps, link.downlink_bps,
                                      link.latency_s)
-        times = self.channel.round_time_s(link, bits)
-        energy = self.channel.round_energy_j(link, bits)
+        comp_s = self._compute_s(cuts)
+        times = self.channel.round_time_s(link, bits) + comp_s
+        charge, tx_s, c_s, can_tx = self._charge(link, bits, comp_s)
 
-        scheduled = self.energy_left >= energy           # gate 1: energy
+        # gate 1: energy (deadline-capped charge) + a transmit window at all
+        scheduled = (self.energy_left >= charge) & can_tx
         if cfg.selection == "topk" and cfg.topk > 0:     # gate 2a: k fastest
             order = np.argsort(np.where(scheduled, times, np.inf))
             keep = np.zeros(self.U, bool)
@@ -145,12 +229,14 @@ class ParticipationScheduler:
                                                link.latency_s)
                 cuts = np.where(scheduled, cuts2, cuts)
                 bits = self.cutter.bits_for(cuts)
-            times = self.channel.round_time_s(link, bits)
-            energy = self.channel.round_energy_j(link, bits)
+                comp_s = self._compute_s(cuts)
+            times = self.channel.round_time_s(link, bits) + comp_s
+            charge, tx_s, c_s, can_tx = self._charge(link, bits, comp_s)
             # the contended price can only be higher; a client that can no
-            # longer afford it withdraws before transmitting
-            withdrawn = scheduled & (self.energy_left < energy)
-            scheduled &= self.energy_left >= energy
+            # longer afford it (or whose re-decided cut left it no transmit
+            # window) withdraws before transmitting
+            withdrawn = scheduled & ~((self.energy_left >= charge) & can_tx)
+            scheduled &= (self.energy_left >= charge) & can_tx
             if (self.cfg.reshare_uplink and withdrawn.any()
                     and scheduled.any()):
                 # second pass: survivors absorb the capacity the withdrawn
@@ -162,21 +248,16 @@ class ParticipationScheduler:
                                                        self.es_assign)
                 link = LinkState(eff_up, private.downlink_bps,
                                  private.latency_s)
-                times = self.channel.round_time_s(link, bits)
-                energy = self.channel.round_energy_j(link, bits)
+                times = self.channel.round_time_s(link, bits) + comp_s
+                charge, tx_s, c_s, _ = self._charge(link, bits, comp_s)
 
         alive = scheduled & (times <= cfg.deadline_s)    # gate 3: deadline
 
-        # every transmitting client burns airtime, capped at the deadline
-        # for stragglers (their transmission is cut off, but the energy is
-        # spent); the energy gate above guarantees the charge is affordable
-        with np.errstate(divide="ignore"):
-            t_up = np.asarray(bits.uplink, float) / link.uplink_bps
-        burn = np.minimum(np.where(np.isfinite(t_up), t_up, 0.0),
-                          cfg.deadline_s)
-        self.energy_left = np.where(
-            scheduled, self.energy_left - cfg.tx_power_w * burn,
-            self.energy_left)
+        # every scheduled client pays the deadline-capped charge (compute
+        # joules + transmit joules) — the SAME quantity the energy gate
+        # admitted it on, so the budget can never go negative
+        self.energy_left = np.where(scheduled, self.energy_left - charge,
+                                    self.energy_left)
 
         if not alive.any():
             # a scheduled-but-straggling client still makes the ES wait
@@ -190,7 +271,9 @@ class ParticipationScheduler:
             round_time = float(t) if np.isfinite(t) else 0.0
         # translate internal candidate-cell indices into cut depth / codec
         # positions so the report reads "which split, which codec", and sum
-        # the offered traffic of everyone who transmitted
+        # the bits that actually MOVED: a completing client moved its full
+        # up+down traffic, a deadline-cut straggler only the uplink bits it
+        # pushed before the cutoff (uplink_bps * tx_s) and no downlink
         rep_cuts = rep_codecs = None
         if cuts is not None:
             rep_cuts = self.cutter.cut_pos[cuts]
@@ -198,10 +281,19 @@ class ParticipationScheduler:
                 rep_codecs = self.cutter.codec_pos[cuts]
         up = np.broadcast_to(np.asarray(bits.uplink, float), (self.U,))
         down = np.broadcast_to(np.asarray(bits.downlink, float), (self.U,))
-        bits_tx = float((up + down)[scheduled].sum())
+        up_rate = np.broadcast_to(np.asarray(link.uplink_bps, float),
+                                  (self.U,))
+        with np.errstate(invalid="ignore"):      # ideal channel: inf * 0
+            moved_up = np.where(alive, up,
+                                np.where(tx_s > 0, up_rate * tx_s, 0.0))
+        moved = moved_up + np.where(alive, down, 0.0)
+        bits_tx = float(moved[scheduled].sum())
+        compute_j = np.where(scheduled, cfg.compute_power_w * c_s, 0.0)
         return RoundReport(round_idx=round_idx, mask=alive.astype(np.float64),
                            times_s=times, round_time_s=round_time,
                            energy_left_j=self.energy_left.copy(),
                            scheduled=scheduled.copy(), cuts=rep_cuts,
                            uplink_bps=np.asarray(link.uplink_bps).copy(),
-                           codecs=rep_codecs, bits_tx=bits_tx)
+                           codecs=rep_codecs, bits_tx=bits_tx,
+                           compute_s=np.asarray(comp_s, float).copy(),
+                           compute_j=compute_j)

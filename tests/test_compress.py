@@ -83,15 +83,23 @@ def test_codec_factory_and_payloads():
 @pytest.mark.parametrize("shape", [(7,), (16, 16, 16, 64), (3, 5, 11)])
 @pytest.mark.parametrize("bits", [8, 4])
 def test_pallas_quantizer_matches_ref(shape, bits, rng):
-    """Acceptance: the Pallas int8/int4 quantizer matches ref.py under jit
-    and interpret mode — exactly, since both run the same float ops."""
+    """Acceptance: the Pallas int8/int4 quantizer matches ref.py exactly —
+    eager vs eager AND jit vs jit, since both run the same float ops.
+    The comparison must be like-for-like: an OUTER jit fuses the
+    surrounding scale/uniform arithmetic differently (1-ulp FMA-style
+    drift for ~half of int4 inputs), so jitted-pallas vs EAGER-ref is not
+    a kernel property and used to flake with the session rng's state."""
     x = jnp.asarray(rng.normal(size=shape).astype(np.float32)) * 3.0
     key = jax.random.PRNGKey(0)
     got = quantize_dequantize(x, key, bits=bits)            # pallas interpret
     ref = quantize_dequantize(x, key, bits=bits, use_ref=True)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
     jitted = jax.jit(lambda x_, k_: quantize_dequantize(x_, k_, bits=bits))
-    np.testing.assert_array_equal(np.asarray(jitted(x, key)), np.asarray(ref))
+    jitted_ref = jax.jit(lambda x_, k_: quantize_dequantize(x_, k_,
+                                                            bits=bits,
+                                                            use_ref=True))
+    np.testing.assert_array_equal(np.asarray(jitted(x, key)),
+                                  np.asarray(jitted_ref(x, key)))
 
 
 def test_quantizer_error_bounded_and_unbiased(rng):
@@ -457,26 +465,34 @@ def test_reshare_strictly_raises_survivor_rate():
 # ------------------------------------------------------ sweep acceptance ---
 def test_compress_sweep_dry_run_int8_beats_fp32():
     """The benchmark's acceptance bar at tier-1 speed (scheduler only, no
-    training): int8 activations STRICTLY increase scheduled participation
-    over fp32 at the same fixed deadline and energy budget."""
+    training): int8 activations STRICTLY increase participation over fp32
+    at the same fixed deadline and energy budget — fp32 clients are still
+    scheduled under the deadline-capped energy gate (ISSUE 5) but every
+    transmission is cut off at the deadline, so they burn budget moving
+    bits that never complete."""
     sweep = _sweep_module()
     table = sweep.sweep(None, ["static"], dry_run=True, deadline=1.0,
                         rounds=2, es_uplink_mbps=40.0, energy_budget=1.0,
                         seed=0, topk_frac=0.05)
     rows = {r["codec"]: r for r in table}
     assert set(rows) == set(CODEC_NAMES)
-    assert rows["int8"]["scheduled_rate"] > rows["fp32"]["scheduled_rate"]
+    assert rows["int8"]["scheduled_rate"] >= rows["fp32"]["scheduled_rate"]
     assert (rows["int8"]["participation_rate"]
             > rows["fp32"]["participation_rate"])
-    assert rows["int8"]["total_bits"] < rows["fp32"]["total_bits"] \
-        or rows["fp32"]["total_bits"] == 0.0
+    # the honest moved-bits accounting makes the waste visible: fp32 moved
+    # bits (its stragglers transmitted until the cutoff) yet nobody ever
+    # completed an aggregation
+    assert rows["fp32"]["participation_rate"] == 0.0
+    assert rows["fp32"]["total_bits"] > 0.0
+    assert rows["int8"]["participation_rate"] > 0.0
     assert sweep.check_acceptance(table, ["static"])
 
 
 def test_compress_sweep_fedsim_int8_participates_fp32_priced_out(small_fed):
     """The same bar through the REAL simulator at test scale: with the
-    benchmark's channel, the fp32 contended uplink price exceeds the energy
-    budget (no client ever transmits) while int8 clients are scheduled,
+    benchmark's channel, fp32 clients transmit (the deadline-capped charge
+    is affordable) but every transmission is cut off before completing, so
+    no fp32 client ever participates — while int8 clients are scheduled,
     make the deadline, and train."""
     h = HierarchyConfig(num_edge_servers=2, clients_per_es=4, kappa0=2,
                         kappa1=2, global_rounds=1)
@@ -496,9 +512,12 @@ def test_compress_sweep_fedsim_int8_participates_fp32_priced_out(small_fed):
     net_q = run(link_codecs("int8"))
     sched_fp = sum(n["scheduled"] for n in net_fp)
     sched_q = sum(n["scheduled"] for n in net_q)
+    parts_fp = sum(n["participants"] for n in net_fp)
     parts_q = sum(n["participants"] for n in net_q)
-    assert sched_q > sched_fp
-    assert parts_q > sum(n["participants"] for n in net_fp)
-    assert parts_q > 0
-    assert sum(n["bits"] for n in net_q) < 0.3 * max(
-        sum(n["bits"] for n in net_fp), 1.0) or sched_fp == 0
+    assert sched_q >= sched_fp
+    assert parts_fp == 0                  # fp32: all cut off at the deadline
+    assert parts_q > 0                    # int8: completes and aggregates
+    # fp32 DID transmit (the capped charge was affordable) and its moved
+    # bits were all wasted on discarded transmissions
+    assert sched_fp > 0
+    assert sum(n["bits"] for n in net_fp) > 0

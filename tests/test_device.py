@@ -1,0 +1,422 @@
+"""Device (compute) model + the ISSUE-5 wireless-accounting bugfixes.
+
+Four layers of lock-down:
+
+1. **regression anchor** — with ``compute_gflops=inf`` (and
+   ``codec_cycles_per_element=0``) the scheduler reproduces the pre-PR
+   ``RoundReport``s BIT-for-bit: ``tests/golden_device_reports.json`` was
+   captured from the bits-only scheduler before the device model existed,
+   over scenarios the satellite bugfixes cannot touch (``deadline_s=inf``);
+2. the FLOP accounting itself — per-cut conv/dense counts, codec
+   encode/decode work, monotonicities;
+3. the controller — with finite compute the deadline policy picks strictly
+   shallower cuts when devices slow down, and the device_sweep benchmark's
+   acceptance bar holds at test scale;
+4. the satellite bugfixes — straggler bits_tx counts moved bits only, the
+   energy gate and the energy charge agree on the deadline-capped quantity,
+   an asymmetric trace pair is honored, and FedSim prices index bits at the
+   LARGEST client dataset.
+"""
+
+import importlib.util
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.configs.base import HierarchyConfig, TrainConfig, WirelessConfig
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.core.comm import CommModel, comm_for_cnn, comm_table_for_cnn
+from repro.models import cnn
+from repro.utils.flops import conv2d_flops, dense_layer_flops, training_flops
+from repro.wireless import (ChannelModel, DeviceModel, RoundBits,
+                            client_round_bits, client_round_flops,
+                            make_cut_controller, make_scheduler)
+
+GOLDEN = pathlib.Path(__file__).parent / "golden_device_reports.json"
+
+TABLE_KW = dict(dataset_size=400, batch_size=16, batches_per_epoch=2)
+
+
+def _table():
+    return comm_table_for_cnn(CNN_CFG, **TABLE_KW)
+
+
+# ------------------------------------------------ 1. regression anchor -----
+def _golden_scheduler(name):
+    es = np.arange(8) // 4
+    if name == "static-energy":
+        cfg = WirelessConfig(model="static", mean_uplink_mbps=15.0,
+                             mean_downlink_mbps=60.0, latency_s=0.01,
+                             heterogeneity=1.0, energy_budget_j=2.0,
+                             tx_power_w=0.5, seed=0)
+        return make_scheduler(cfg, 8, comm_for_cnn(CNN_CFG, **TABLE_KW), 2,
+                              es_assign=es)
+    if name == "rayleigh-contended-greedy":
+        cfg = WirelessConfig(model="rayleigh", mean_uplink_mbps=15.0,
+                             mean_downlink_mbps=60.0, latency_s=0.01,
+                             heterogeneity=0.7, es_uplink_mbps=30.0,
+                             energy_budget_j=20.0, tx_power_w=0.5,
+                             cut_policy="greedy",
+                             cut_candidates=cnn.CUT_CANDIDATES, seed=3)
+        return make_scheduler(cfg, 8, kappa0=2, comm_table=_table(),
+                              es_assign=es)
+    assert name == "trace-fallback-downlink"
+    cfg = WirelessConfig(model="trace",
+                         trace=((5.0,) * 8, (25.0,) * 8, (12.0,) * 8),
+                         mean_uplink_mbps=10.0, mean_downlink_mbps=40.0,
+                         latency_s=0.02, energy_budget_j=30.0,
+                         tx_power_w=0.5, seed=1)
+    return make_scheduler(cfg, 8, comm_for_cnn(CNN_CFG, **TABLE_KW), 2,
+                          es_assign=es)
+
+
+@pytest.mark.parametrize("scenario", ["static-energy",
+                                      "rayleigh-contended-greedy",
+                                      "trace-fallback-downlink"])
+def test_inf_compute_reproduces_pre_pr_reports_bit_for_bit(scenario):
+    """The whole device model must be invisible at its defaults: every
+    RoundReport field equals the golden values captured from the bits-only
+    scheduler before this PR, bit for bit."""
+    golden = json.loads(GOLDEN.read_text())[scenario]
+    s = _golden_scheduler(scenario)
+    for r, g in enumerate(golden):
+        rep = s.step(r)
+        assert rep.mask.tolist() == g["mask"]
+        assert np.asarray(rep.times_s).tolist() == g["times_s"]
+        assert rep.round_time_s == g["round_time_s"]
+        assert np.asarray(rep.energy_left_j).tolist() == g["energy_left_j"]
+        assert np.asarray(rep.scheduled).astype(int).tolist() == g["scheduled"]
+        assert np.broadcast_to(np.asarray(rep.uplink_bps, float),
+                               rep.mask.shape).tolist() == g["uplink_bps"]
+        assert rep.bits_tx == g["bits_tx"]
+        if "cuts" in g:
+            assert np.asarray(rep.cuts).tolist() == g["cuts"]
+        # ...and the new fields are exactly zero
+        assert (rep.compute_s == 0).all()
+        assert (rep.compute_j == 0).all()
+
+
+def test_ideal_channel_inf_compute_still_free():
+    cfg = WirelessConfig(model="ideal", deadline_s=0.5, energy_budget_j=1.0)
+    s = make_scheduler(cfg, 6, comm_for_cnn(CNN_CFG, **TABLE_KW), 2)
+    for r in range(3):
+        rep = s.step(r)
+        np.testing.assert_array_equal(rep.mask, np.ones(6))
+        assert rep.round_time_s == 0.0
+        assert (rep.compute_s == 0).all()
+        np.testing.assert_array_equal(rep.energy_left_j, 1.0)
+
+
+# ------------------------------------------------ 2. FLOP accounting -------
+def test_cnn_client_block_flops_per_cut():
+    """The conv/dense counts, written out longhand: conv FLOPs go by output
+    positions, so the deep cuts cost an order of magnitude more compute
+    even though their activation tensors shrink."""
+    s = CNN_CFG.image_size
+    conv1 = conv2d_flops(1, s, s, 3, CNN_CFG.channels, CNN_CFG.conv1_filters)
+    conv2 = conv2d_flops(1, s // 2, s // 2, 3, CNN_CFG.conv1_filters,
+                         CNN_CFG.conv2_filters)
+    fc1 = dense_layer_flops(1, CNN_CFG.flat_dim, CNN_CFG.fc_hidden)
+    assert cnn.client_block_flops(CNN_CFG, 1, "conv1") == conv1
+    assert cnn.client_block_flops(CNN_CFG, 1, "conv2") == conv1 + conv2
+    assert cnn.client_block_flops(CNN_CFG, 1, "fc1") == conv1 + conv2 + fc1
+    assert cnn.client_block_flops(CNN_CFG, 4, "conv2") == 4 * (conv1 + conv2)
+    with pytest.raises(ValueError):
+        cnn.client_block_flops(CNN_CFG, 1, "fc2")
+    # deeper cut -> strictly more client compute (the bits say the opposite
+    # between conv1 and conv2 — that opposition IS the ASFL trade-off)
+    flops = [cnn.client_block_flops(CNN_CFG, 1, c)
+             for c in cnn.CUT_CANDIDATES]
+    assert flops == sorted(flops) and flops[0] < flops[-1]
+
+
+def test_comm_models_carry_training_flops():
+    table = _table()
+    for c, cm in table.items():
+        assert cm.client_flops_per_sample == training_flops(
+            cnn.client_block_flops(CNN_CFG, 1, c))
+    # client_round_flops is kappa0 * batches * batch_size * per-sample
+    cm = table["conv2"]
+    assert client_round_flops(cm, 3) == 3 * 2 * 16 * cm.client_flops_per_sample
+    assert client_round_flops(cm, 4) > client_round_flops(cm, 3)
+
+
+def test_codec_cycles_charged_only_for_lossy_codecs():
+    from repro.compress import get_codec, link_codecs
+    base = comm_for_cnn(CNN_CFG, **TABLE_KW)
+    f0 = client_round_flops(base, 2, codec_cycles_per_element=10.0)
+    assert f0 == client_round_flops(base, 2)     # no codecs: no codec work
+    ident = comm_for_cnn(CNN_CFG, **TABLE_KW, codecs=link_codecs("fp32"))
+    assert client_round_flops(ident, 2, codec_cycles_per_element=10.0) == f0
+    q = comm_for_cnn(CNN_CFG, **TABLE_KW, codecs=link_codecs("int8"))
+    fq = client_round_flops(q, 2, codec_cycles_per_element=10.0)
+    # encode o_fp up + decode o_bp down each minibatch, 2*Z_0 at the offload
+    n_batches = 2 * q.batches_per_epoch
+    elems = (2 * n_batches * q.batch_size * q.cut_size
+             + 2 * q.client_params)
+    assert fq == client_round_flops(q, 2) + 10.0 * elems
+    assert fq > f0                                # codec work costs compute
+    # a lossy act codec alone charges only the uplink elements
+    one = CommModel(batch_size=4, batches_per_epoch=1, cut_size=100,
+                    client_params=50, act_codec=get_codec("int8"))
+    assert client_round_flops(one, 1, codec_cycles_per_element=2.0) == \
+        2.0 * 1 * 4 * 100
+
+
+def test_device_model_time_and_energy():
+    cfg = WirelessConfig(compute_gflops=2.0, compute_power_w=0.5, seed=0)
+    dev = DeviceModel(cfg, 4)
+    np.testing.assert_allclose(dev.compute_time_s(4e9), 2.0)
+    np.testing.assert_allclose(dev.compute_energy_j(dev.compute_time_s(4e9)),
+                               1.0)
+    # monotone: more FLOPs -> more time -> more energy, per client
+    t1, t2 = dev.compute_time_s(1e9), dev.compute_time_s(3e9)
+    assert (t2 > t1).all()
+    assert (dev.compute_energy_j(t2) > dev.compute_energy_j(t1)).all()
+    # infinite compute is exactly free
+    inf_dev = DeviceModel(WirelessConfig(), 4)
+    assert (inf_dev.compute_time_s(1e18) == 0).all()
+    # a zero rate would NaN the deadline math — refuse it loudly
+    with pytest.raises(ValueError, match="positive"):
+        DeviceModel(WirelessConfig(compute_gflops=0.0), 4)
+    # heterogeneity: fixed per-client spread, disjoint from the channel RNG
+    het = DeviceModel(WirelessConfig(compute_gflops=10.0,
+                                     compute_heterogeneity=1.0, seed=0), 8)
+    assert het.flops_per_s.min() < het.flops_per_s.max() / 2
+    het2 = DeviceModel(WirelessConfig(compute_gflops=10.0,
+                                      compute_heterogeneity=1.0, seed=0), 8)
+    np.testing.assert_array_equal(het.flops_per_s, het2.flops_per_s)
+
+
+def test_compute_energy_monotone_in_flops_through_scheduler():
+    """Scheduler level: the same channel with a heavier client workload
+    drains strictly more energy from every scheduled client."""
+    def run(comm):
+        cfg = WirelessConfig(model="static", mean_uplink_mbps=50.0,
+                             mean_downlink_mbps=200.0, latency_s=0.0,
+                             compute_gflops=5.0, compute_power_w=0.5,
+                             energy_budget_j=100.0, seed=0)
+        s = make_scheduler(cfg, 4, comm, 2)
+        return s.step(0)
+
+    shallow = run(comm_for_cnn(CNN_CFG, cut="conv1", **TABLE_KW))
+    deep = run(comm_for_cnn(CNN_CFG, cut="fc1", **TABLE_KW))
+    assert (deep.compute_s > shallow.compute_s).all()
+    assert (deep.compute_j > shallow.compute_j).all()
+    assert (deep.energy_left_j < shallow.energy_left_j).all()
+    # and compute time is part of the deadline-facing round time
+    assert (deep.times_s > shallow.times_s).all()
+
+
+# ------------------------------------------------ 3. controller ------------
+def test_deadline_policy_shallower_when_compute_slows_10x():
+    """The acceptance bar's controller half: at 10 GFLOP/s every client
+    holds the deep-feasible cut; 10x slower compute makes that cut's FLOPs
+    blow the deadline, so the policy walks strictly shallower."""
+    ctl = make_cut_controller(_table(), 2, policy="deadline", deadline_s=4.0)
+    up = np.full(4, 10e6)
+    kw = dict(compute_gflops=10.0, seed=0)
+    fast = DeviceModel(WirelessConfig(**kw), 4)
+    slow = DeviceModel(WirelessConfig(**{**kw, "compute_gflops": 1.0}), 4)
+    cuts_fast = ctl.decide(up, 4 * up, 0.0, np.full(4, np.inf),
+                           fast.sec_per_flop)
+    cuts_slow = ctl.decide(up, 4 * up, 0.0, np.full(4, np.inf),
+                           slow.sec_per_flop)
+    assert (cuts_slow < cuts_fast).all()
+    # bits-only (sec_per_flop omitted) matches infinite compute
+    inf_dev = DeviceModel(WirelessConfig(seed=0), 4)
+    np.testing.assert_array_equal(
+        ctl.decide(up, 4 * up, 0.0, np.full(4, np.inf)),
+        ctl.decide(up, 4 * up, 0.0, np.full(4, np.inf),
+                   inf_dev.sec_per_flop))
+
+
+def test_controller_estimates_price_compute_energy():
+    ctl = make_cut_controller(_table(), 2, policy="greedy",
+                              compute_power_w=0.5)
+    up = np.full(2, 10e6)
+    dev = DeviceModel(WirelessConfig(compute_gflops=2.0, seed=0), 2)
+    t0, e0 = ctl._estimates(up, 4 * up, np.zeros(2))
+    t1, e1 = ctl._estimates(up, 4 * up, np.zeros(2), dev.sec_per_flop)
+    t_comp = ctl.flops[:, None] * dev.sec_per_flop[None, :]
+    np.testing.assert_allclose(t1, t0 + t_comp)
+    np.testing.assert_allclose(e1, e0 + 0.5 * t_comp)
+
+
+def test_device_sweep_acceptance_at_test_scale():
+    """benchmarks/device_sweep.py's in-run bar, via its dry-run mode: the
+    deadline policy's mean cut is non-increasing in compute heterogeneity
+    and strictly shallower at the top sigma."""
+    spec = importlib.util.spec_from_file_location(
+        "device_sweep", pathlib.Path(__file__).parent.parent / "benchmarks" /
+        "device_sweep.py")
+    device_sweep = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(device_sweep)
+    sigmas = (0.0, 1.0, 2.0)
+    table = device_sweep.sweep(None, sigmas, dry_run=True, channel="static",
+                               rounds=2, seed=0, deadline=4.0,
+                               es_uplink_mbps=40.0, compute_gflops=10.0,
+                               compute_power_w=0.2)
+    assert device_sweep.check_acceptance(table, sigmas)
+
+
+# ------------------------------------------------ 4. satellite bugfixes ----
+BITS = RoundBits(uplink=10_000_000, downlink=10_000_000)
+
+
+def test_straggler_bits_tx_counts_only_moved_bits():
+    """Regression: a deadline-cut straggler moved uplink_bps * tx window
+    bits and never received its downlink — bits_tx must count that, not the
+    full offered up+down traffic."""
+    cfg = WirelessConfig(model="static", mean_uplink_mbps=10.0,
+                         mean_downlink_mbps=40.0, latency_s=0.0,
+                         heterogeneity=1.5, deadline_s=1.0,
+                         energy_budget_j=100.0, tx_power_w=0.5, seed=0)
+    ch = ChannelModel(cfg, 8)
+    from repro.wireless import ParticipationScheduler
+    s = ParticipationScheduler(cfg, ch, BITS)
+    rep = s.step(0)
+    dead = rep.scheduled & (rep.mask == 0)
+    assert dead.any(), "setup must produce scheduled stragglers"
+    t_up = BITS.uplink / rep.uplink_bps
+    expect = 0.0
+    for u in range(8):
+        if rep.mask[u] > 0:
+            expect += BITS.uplink + BITS.downlink      # completed: all of it
+        elif rep.scheduled[u]:
+            expect += rep.uplink_bps[u] * min(t_up[u], 1.0)  # cut off
+    assert rep.bits_tx == pytest.approx(expect)
+    # strictly less than the old all-offered accounting
+    offered = float((BITS.uplink + BITS.downlink) * rep.scheduled.sum())
+    assert rep.bits_tx < offered
+
+
+def test_energy_gate_matches_deadline_capped_charge():
+    """Regression: a would-be straggler whose budget covers the deadline-
+    capped charge (but not the full uncapped airtime) must be scheduled and
+    pay exactly the capped charge — the old gate silently barred it while a
+    richer client was scheduled and charged the capped amount."""
+    # 10 Mb at 5 Mbps = 2 s airtime; deadline 1 s -> capped charge 0.5 J,
+    # uncapped 1.0 J.  budget 0.7 J sits exactly in the disputed band.
+    cfg = WirelessConfig(model="static", mean_uplink_mbps=5.0,
+                         mean_downlink_mbps=20.0, latency_s=0.0,
+                         deadline_s=1.0, energy_budget_j=0.7,
+                         tx_power_w=0.5, seed=0)
+    from repro.wireless import ParticipationScheduler
+    s = ParticipationScheduler(cfg, ChannelModel(cfg, 4), BITS)
+    rep = s.step(0)
+    assert rep.scheduled.all()                    # gate admits the capped 0.5
+    assert rep.num_participants == 0              # ...they all straggle
+    np.testing.assert_allclose(rep.energy_left_j, 0.7 - 0.5)
+    rep2 = s.step(1)                              # 0.2 J < 0.5 J: now barred
+    assert not rep2.scheduled.any()
+    np.testing.assert_allclose(rep2.energy_left_j, 0.2)
+
+
+def test_compute_overrun_client_never_scheduled():
+    """A client whose compute alone consumes the whole deadline window
+    cannot push a single bit — it must not be scheduled (at
+    compute_power_w=0 its capped charge is 0, so without the transmit-
+    window gate it would be scheduled forever, eating a contention share
+    and pinning the round clock at the deadline)."""
+    cfg = WirelessConfig(model="static", mean_uplink_mbps=50.0,
+                         mean_downlink_mbps=200.0, latency_s=0.0,
+                         deadline_s=1.0, compute_gflops=1.0,
+                         energy_budget_j=5.0, seed=0)
+    # fc1 workload: ~8.7 GFLOP/round at 1 GFLOP/s = ~8.7 s >> 1 s deadline
+    s = make_scheduler(cfg, 4, comm_for_cnn(CNN_CFG, cut="fc1", **TABLE_KW),
+                       2)
+    for r in range(3):
+        rep = s.step(r)
+        assert not rep.scheduled.any()
+        assert rep.num_participants == 0
+        assert rep.round_time_s == 0.0            # nobody pins the clock
+        np.testing.assert_array_equal(rep.energy_left_j, 5.0)
+    # the same devices at a feasible (shallow) cut ARE scheduled
+    s2 = make_scheduler(cfg, 4,
+                        comm_for_cnn(CNN_CFG, cut="conv1", **TABLE_KW), 2)
+    assert s2.step(0).scheduled.all()
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_energy_never_negative_and_charge_affordable(seed):
+    """Seeded invariant: with the gate and the deduction using the same
+    deadline-capped quantity, budgets can never go negative and every
+    scheduled client could afford what it was actually charged."""
+    cfg = WirelessConfig(model="rayleigh", mean_uplink_mbps=8.0,
+                         mean_downlink_mbps=32.0, latency_s=0.01,
+                         heterogeneity=1.0, deadline_s=2.0,
+                         energy_budget_j=1.5, tx_power_w=0.5,
+                         es_uplink_mbps=20.0,
+                         compute_gflops=5.0, compute_power_w=0.3,
+                         compute_heterogeneity=0.5, seed=seed)
+    s = make_scheduler(cfg, 8, comm_for_cnn(CNN_CFG, **TABLE_KW), 2,
+                       es_assign=np.arange(8) // 4)
+    prev = s.energy_left.copy()
+    for r in range(12):
+        rep = s.step(r)
+        assert (rep.energy_left_j >= -1e-12).all()
+        charged = prev - rep.energy_left_j
+        # every charge was affordable at gate time (gate <=> affordability)
+        assert (charged <= prev + 1e-12).all()
+        # only scheduled clients were charged
+        assert (charged[~rep.scheduled] == 0).all()
+        prev = rep.energy_left_j
+
+
+def test_trace_down_pair_is_honored():
+    """An asymmetric measured (uplink, downlink) trace pair must drive the
+    two directions independently; without trace_down the downlink falls
+    back to the rescaled uplink trace (the documented fallback)."""
+    up_tr = ((10.0,) * 4, (2.0,) * 4)
+    down_tr = ((1.0,) * 4, (80.0,) * 4)          # anti-correlated on purpose
+    cfg = WirelessConfig(model="trace", trace=up_tr, trace_down=down_tr,
+                         mean_uplink_mbps=10.0, mean_downlink_mbps=40.0)
+    ch = ChannelModel(cfg, 4)
+    l0, l1, l2 = ch.sample(0), ch.sample(1), ch.sample(2)
+    np.testing.assert_allclose(l0.uplink_bps, 10e6)
+    np.testing.assert_allclose(l0.downlink_bps, 1e6)     # NOT 4x the uplink
+    np.testing.assert_allclose(l1.uplink_bps, 2e6)
+    np.testing.assert_allclose(l1.downlink_bps, 80e6)
+    np.testing.assert_allclose(l2.downlink_bps, l0.downlink_bps)  # cycles
+    # fallback: same config minus trace_down rescales the uplink trace
+    fb = ChannelModel(WirelessConfig(model="trace", trace=up_tr,
+                                     mean_uplink_mbps=10.0,
+                                     mean_downlink_mbps=40.0), 4)
+    f0 = fb.sample(0)
+    np.testing.assert_allclose(f0.downlink_bps, 40e6)    # 10 Mbps * 4x ratio
+    # a mismatched pair would silently desynchronize (both cycle modulo
+    # their own length) — refuse it loudly instead
+    with pytest.raises(ValueError, match="round-for-round"):
+        ChannelModel(WirelessConfig(model="trace", trace=up_tr,
+                                    trace_down=down_tr[:1]), 4)
+
+
+def test_fedsim_prices_index_bits_at_max_client_size():
+    """Eq. 17 is an upper bound: under a Dirichlet(0.05) split the largest
+    client's dataset is far above the mean, and the scheduler's byte
+    accounting must use the max (the honest bound), not the mean."""
+    from repro.core.fedsim import FedSim
+    from repro.data.synthetic import make_federated_image_data
+
+    fed = make_federated_image_data(8, alpha=0.05, train_per_class=40,
+                                    test_per_class=10, seed=0)
+    sizes = [len(i) for i in fed.train_indices]
+    assert max(sizes) > int(np.mean(sizes))      # the skew is real
+    h = HierarchyConfig(num_edge_servers=2, clients_per_es=4, kappa0=1,
+                        kappa1=1, global_rounds=1)
+    t = TrainConfig(learning_rate=0.05, batch_size=8, freeze_head=True)
+    w = WirelessConfig(model="static", deadline_s=float("inf"))
+    sim = FedSim(CNN_CFG, fed, h, t, batches_per_epoch=1, seed=0, wireless=w)
+    comm_max = comm_for_cnn(CNN_CFG, dataset_size=max(sizes),
+                            batch_size=t.batch_size, batches_per_epoch=1)
+    comm_mean = comm_for_cnn(CNN_CFG, dataset_size=int(np.mean(sizes)),
+                             batch_size=t.batch_size, batches_per_epoch=1)
+    want = client_round_bits(comm_max, h.kappa0)
+    got = sim.scheduler.bits
+    assert (got.uplink, got.downlink) == (want.uplink, want.downlink)
+    # and the mean would genuinely undercount at this skew
+    under = client_round_bits(comm_mean, h.kappa0)
+    assert under.uplink < want.uplink
