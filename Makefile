@@ -1,0 +1,20 @@
+# Local mirrors of the CI gates (.github/workflows/ci.yml).
+#   make lint   — tier 0: reprolint, the static contract gate (seconds)
+#   make test   — tier 1: fast pytest suite (slow marker deselected)
+#   make slow   — tier 2: the long end-to-end suite
+#   make check  — tier 0 then tier 1, the pre-commit sequence
+
+PY ?= python
+
+.PHONY: lint test slow check
+
+lint:
+	$(PY) -m tools.reprolint src tests benchmarks examples
+
+test:
+	PYTHONPATH=src $(PY) -m pytest -x -q
+
+slow:
+	PYTHONPATH=src $(PY) -m pytest -m slow
+
+check: lint test

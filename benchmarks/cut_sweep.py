@@ -11,9 +11,13 @@ beating the participation rate of the worst fixed cut at the same deadline
 — the acceptance bar of ISSUE 2 — while fixed cuts pay whichever bits their
 frozen split costs.
 
+``--dry-run`` skips training and drives the ParticipationScheduler alone
+(same channel, same per-cut byte/FLOP table) — seconds, not minutes; the
+tier-1 smoke test and CI invoke this mode so the benchmark cannot rot.
+
     PYTHONPATH=src python benchmarks/cut_sweep.py \
         [--channels static rayleigh] [--deadline 4.0] [--rounds 2] \
-        [--out cut_sweep.json]
+        [--dry-run] [--out cut_sweep.json]
 """
 
 from __future__ import annotations
@@ -25,9 +29,11 @@ import numpy as np
 
 from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
 from repro.configs.sweeps import sweep_hierarchy, sweep_train, sweep_wireless
+from repro.core.comm import comm_table_for_cnn
 from repro.core.fedsim import FedSim
 from repro.data.synthetic import make_federated_image_data
 from repro.models.cnn import CUT_CANDIDATES
+from repro.wireless import make_scheduler
 
 
 def run_one(fed, policy: str, channel: str, *, deadline: float, rounds: int,
@@ -64,11 +70,54 @@ def run_one(fed, policy: str, channel: str, *, deadline: float, rounds: int,
     }
 
 
-def sweep(fed, channels, *, deadline: float, rounds: int,
-          es_uplink_mbps: float, seed: int) -> list[dict]:
+def dry_run_one(policy: str, channel: str, *, deadline: float, rounds: int,
+                es_uplink_mbps: float, seed: int) -> dict:
+    """Scheduler-only cell: same channel + per-cut byte table, no training."""
+    h = sweep_hierarchy(rounds)
+    fixed_cut = None
+    if policy.startswith("fixed:"):
+        fixed_cut = policy.split(":", 1)[1]
+        cut_policy, candidates = "fixed", (fixed_cut,)
+    else:
+        cut_policy, candidates = policy, CUT_CANDIDATES
+    wireless = sweep_wireless(channel, deadline_s=deadline,
+                              es_uplink_mbps=es_uplink_mbps,
+                              cut_policy=cut_policy,
+                              cut_candidates=candidates, seed=seed)
+    table = comm_table_for_cnn(CNN_CFG, dataset_size=400,
+                               batch_size=sweep_train().batch_size,
+                               batches_per_epoch=2, cuts=candidates)
+    sched = make_scheduler(
+        wireless, h.num_clients, kappa0=h.kappa0, comm_table=table,
+        es_assign=np.arange(h.num_clients) // h.clients_per_es)
+    network = []
+    for r in range(rounds * h.kappa1):
+        rep = sched.step(r)
+        row = {"participants": rep.num_participants,
+               "round_time_s": rep.round_time_s}
+        if rep.mean_cut is not None:
+            row["mean_cut"] = rep.mean_cut
+        network.append(row)
+    parts = [n["participants"] for n in network] or [0]
+    times = [n["round_time_s"] for n in network] or [0.0]
+    cuts = [n["mean_cut"] for n in network if "mean_cut" in n]
+    return {
+        "policy": policy,
+        "channel": channel,
+        "deadline_s": deadline,
+        "participation_rate": float(np.mean(parts)) / h.num_clients,
+        "mean_round_time_s": float(np.mean(times)),
+        "mean_cut": float(np.mean(cuts)) if cuts else 0.0,
+        "dry_run": True,
+    }
+
+
+def sweep(fed, channels, *, dry_run: bool = False, deadline: float,
+          rounds: int, es_uplink_mbps: float, seed: int) -> list[dict]:
     policies = [f"fixed:{c}" for c in CUT_CANDIDATES] + ["greedy", "deadline"]
-    return [run_one(fed, p, ch, deadline=deadline, rounds=rounds,
-                    es_uplink_mbps=es_uplink_mbps, seed=seed)
+    kw = dict(deadline=deadline, rounds=rounds,
+              es_uplink_mbps=es_uplink_mbps, seed=seed)
+    return [dry_run_one(p, ch, **kw) if dry_run else run_one(fed, p, ch, **kw)
             for ch in channels for p in policies]
 
 
@@ -81,14 +130,19 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=2)
     ap.add_argument("--alpha", type=float, default=0.3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="scheduler-only sweep: no training, seconds")
     ap.add_argument("--out", default=None, help="also write JSON here")
     args = ap.parse_args(argv)
 
-    fed = make_federated_image_data(8, alpha=args.alpha, train_per_class=40,
-                                    test_per_class=20, seed=args.seed)
-    table = sweep(fed, args.channels, deadline=args.deadline,
-                  rounds=args.rounds, es_uplink_mbps=args.es_uplink_mbps,
-                  seed=args.seed)
+    fed = None
+    if not args.dry_run:
+        fed = make_federated_image_data(8, alpha=args.alpha,
+                                        train_per_class=40,
+                                        test_per_class=20, seed=args.seed)
+    table = sweep(fed, args.channels, dry_run=args.dry_run,
+                  deadline=args.deadline, rounds=args.rounds,
+                  es_uplink_mbps=args.es_uplink_mbps, seed=args.seed)
     print(json.dumps(table, indent=2))
     # the ISSUE-2 acceptance bar, checked per channel
     for ch in args.channels:

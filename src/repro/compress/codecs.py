@@ -16,6 +16,7 @@ data.  Each exposes two faces:
 
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 
@@ -28,6 +29,21 @@ class Codec:
     """Common API: a lossy tensor channel with exact byte accounting."""
 
     name = "codec"
+
+    def __post_init__(self):
+        # codecs ride inside the frozen CommModel and are closed over by
+        # jitted step functions as static data — every field must hash NOW,
+        # not fail later inside jax's static-arg machinery with a message
+        # that points nowhere near the offending codec
+        for f in dataclasses.fields(self):
+            value = getattr(self, f.name)
+            try:
+                hash(value)
+            except TypeError:
+                raise TypeError(
+                    f"{type(self).__name__}.{f.name} must be hashable "
+                    f"(codecs are static data under jit); got "
+                    f"{type(value).__name__}: {value!r}") from None
 
     def payload_bits(self, n_elements: int) -> int:
         raise NotImplementedError
@@ -91,6 +107,7 @@ class UniformQuantCodec(Codec):
     interpret: bool = True           # Pallas interpret-mode fallback
 
     def __post_init__(self):
+        super().__post_init__()
         # the integer payload lives in int8 lanes (encode) and the kernel
         # clips to [-qmax, qmax]; wider widths would silently wrap
         if not 2 <= self.bits <= 8:
@@ -209,6 +226,18 @@ class LinkCodecs:
     activations: Codec | None = None   # cut-layer o_fp, client -> ES
     gradients: Codec | None = None     # cut-layer o_bp, ES -> client
     offload: Codec | None = None       # client-block params at round edges
+
+    def __post_init__(self):
+        # same static-data contract as Codec.__post_init__: the triple is a
+        # CommModel field and a jit static arg, so reject non-codec (and
+        # thus possibly unhashable) payloads at construction
+        for f in dataclasses.fields(self):
+            value = getattr(self, f.name)
+            if value is not None and not isinstance(value, Codec):
+                raise TypeError(
+                    f"LinkCodecs.{f.name} must be a Codec or None (static "
+                    f"data under jit); got {type(value).__name__}: "
+                    f"{value!r}")
 
     def is_lossless(self) -> bool:
         return all(c is None or isinstance(c, IdentityCodec)

@@ -1,0 +1,72 @@
+"""Argparse surfaces of the benchmark sweep CLIs.
+
+The lint gate covers ``benchmarks/`` statically; these tests keep the entry
+points themselves executable: bad flags exit nonzero with a usage message,
+and ``--dry-run`` is genuinely side-effect-free (no files written, seconds
+not minutes, scheduler-only).
+"""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+SWEEPS = ["benchmarks/cut_sweep.py", "benchmarks/compress_sweep.py",
+          "benchmarks/device_sweep.py"]
+
+
+def _run(script: str, *args: str, cwd=None):
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    return subprocess.run(
+        [sys.executable, str(REPO / script), *args],
+        capture_output=True, text=True, env=env, cwd=cwd or REPO,
+        timeout=600)
+
+
+class TestBadFlags:
+    @pytest.mark.parametrize("script", SWEEPS)
+    def test_unknown_flag_exits_nonzero(self, script):
+        r = _run(script, "--definitely-not-a-flag")
+        assert r.returncode == 2
+        assert "usage" in r.stderr.lower()
+
+    @pytest.mark.parametrize("script", SWEEPS)
+    def test_bad_value_exits_nonzero(self, script):
+        r = _run(script, "--rounds", "not-an-int")
+        assert r.returncode == 2
+        assert "invalid" in r.stderr.lower()
+
+    def test_bad_channel_choice_rejected(self):
+        r = _run("benchmarks/cut_sweep.py", "--channels", "plasma")
+        assert r.returncode == 2
+        assert "invalid choice" in r.stderr.lower()
+
+
+class TestDryRun:
+    @pytest.mark.parametrize("script", SWEEPS)
+    def test_dry_run_is_side_effect_free(self, script, tmp_path):
+        # run from an empty cwd: a side-effecting run would drop files here
+        r = _run(script, "--dry-run", "--channels", "static", "--rounds", "1",
+                 cwd=tmp_path) if "device" not in script else \
+            _run(script, "--dry-run", "--sigmas", "0.0", "--rounds", "1",
+                 cwd=tmp_path)
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert list(tmp_path.iterdir()) == []
+        # the table is the first pretty-printed JSON array on stdout (the
+        # acceptance summary lines may follow it)
+        start = r.stdout.index("[")
+        rows = json.loads(r.stdout[start:r.stdout.index("\n]", start) + 2])
+        assert rows and all(row.get("dry_run") for row in rows)
+        assert all(0.0 <= row["participation_rate"] <= 1.0 for row in rows)
+
+    def test_dry_run_out_writes_only_the_asked_file(self, tmp_path):
+        out = tmp_path / "table.json"
+        r = _run("benchmarks/cut_sweep.py", "--dry-run", "--channels",
+                 "static", "--rounds", "1", "--out", str(out), cwd=tmp_path)
+        assert r.returncode == 0, r.stderr[-2000:]
+        assert [p.name for p in tmp_path.iterdir()] == ["table.json"]
+        assert json.loads(out.read_text())

@@ -1,0 +1,340 @@
+"""reprolint: each checker layer catches a seeded violation; suppressions
+and the JSON report work; the real tree is clean.
+
+Layer 1 (AST) and layer 2 (Pallas contracts) are driven by known-bad
+fixture snippets written to tmp_path; layer 3 (the eval_shape accounting
+audit) is driven by tampering with the formula side of the cross-check
+(monkeypatched ``cut_activation_size``, a codec whose ``payload_bits``
+disagrees with its declared fields) and asserting the auditor notices.
+"""
+
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from tools.reprolint import astchecks, engine
+from tools.reprolint import pallas_contracts as pc
+
+
+def _findings(snippet: str):
+    return astchecks.check_source(textwrap.dedent(snippet), "fixture.py")
+
+
+def _rules(snippet: str):
+    return {f.rule for f in _findings(snippet)}
+
+
+# ---------------------------------------------------------------- layer 1
+class TestAstCheckers:
+    def test_prng_reuse_caught(self):
+        assert "prng-reuse" in _rules("""
+            import jax
+            def f(key):
+                a = jax.random.normal(key, (3,))
+                b = jax.random.uniform(key, (3,))
+                return a + b
+        """)
+
+    def test_prng_reuse_in_loop_caught(self):
+        # the key is consumed once per iteration without a re-derivation:
+        # invisible to a single linear pass, caught by the walk-twice pass
+        assert "prng-reuse" in _rules("""
+            import jax
+            def f():
+                k = jax.random.PRNGKey(0)
+                for i in range(3):
+                    x = jax.random.normal(k, (2,))
+                return x
+        """)
+
+    def test_split_clears_consumption(self):
+        assert not _rules("""
+            import jax
+            def f(key):
+                a = jax.random.normal(key, (3,))
+                key, sub = jax.random.split(key)
+                b = jax.random.uniform(key, (3,))
+                return a + b
+        """)
+
+    def test_fold_in_loop_is_clean(self):
+        assert not _rules("""
+            import jax
+            def f(key):
+                out = []
+                for i in range(3):
+                    out.append(jax.random.normal(
+                        jax.random.fold_in(key, i), (2,)))
+                return out
+        """)
+
+    def test_lossy_codec_none_key_caught(self):
+        assert "lossy-codec-no-key" in _rules("""
+            def f(codec, x):
+                return codec.apply(None, x)
+        """)
+        assert "lossy-codec-no-key" in _rules("""
+            from repro.kernels.quantize.ops import quantize_dequantize
+            def f(x):
+                return quantize_dequantize(x, None, bits=8)
+        """)
+
+    def test_host_np_in_jit_caught(self):
+        assert "host-np-in-jit" in _rules("""
+            import jax, numpy as np
+            @jax.jit
+            def f(x):
+                return np.sum(x)
+        """)
+
+    def test_host_np_in_pallas_body_caught(self):
+        assert "host-np-in-jit" in _rules("""
+            import numpy as np
+            from jax.experimental import pallas as pl
+            def _body(x_ref, o_ref):
+                o_ref[...] = np.tanh(x_ref[...])
+            def run(x):
+                return pl.pallas_call(_body, out_shape=x)(x)
+        """)
+
+    def test_host_np_outside_jit_ok(self):
+        assert not _rules("""
+            import numpy as np
+            def f(x):
+                return np.sum(x)
+        """)
+
+    def test_nonfrozen_static_caught(self):
+        assert "nonfrozen-static" in _rules("""
+            import jax
+            from dataclasses import dataclass
+            from functools import partial
+            @dataclass
+            class Cfg:
+                a: int = 1
+            @partial(jax.jit, static_argnames=("cfg",))
+            def step(x, cfg: Cfg):
+                return x
+        """)
+
+    def test_frozen_static_ok(self):
+        assert not _rules("""
+            import jax
+            from dataclasses import dataclass
+            from functools import partial
+            @dataclass(frozen=True)
+            class Cfg:
+                a: int = 1
+            @partial(jax.jit, static_argnames=("cfg",))
+            def step(x, cfg: Cfg):
+                return x
+        """)
+
+    def test_mutable_default_caught(self):
+        assert "mutable-default" in _rules("""
+            def f(x, acc=[]):
+                return acc
+        """)
+
+    def test_float64_literal_caught(self):
+        assert "float64-literal" in _rules("""
+            import jax.numpy as jnp
+            def f(x):
+                return x.astype(jnp.float64)
+        """)
+
+    def test_host_np_float64_not_flagged(self):
+        # np.float64 on the host (scheduler masks, fedsim weights) is fine
+        assert not _rules("""
+            import numpy as np
+            def f(x):
+                return np.asarray(x, np.float64)
+        """)
+
+
+# ----------------------------------------------------------- suppressions
+class TestSuppressions:
+    SNIPPET = textwrap.dedent("""
+        import jax
+        def f(key):
+            a = jax.random.normal(key, (3,))
+            b = jax.random.uniform(key, (3,))  # reprolint: disable=prng-reuse
+            return a + b
+    """)
+
+    def test_line_suppression(self):
+        findings = astchecks.check_source(self.SNIPPET, "s.py")
+        sup = engine.Suppressions.scan(self.SNIPPET)
+        assert findings and all(sup.covers(f) for f in findings)
+
+    def test_file_suppression(self):
+        src = "# reprolint: disable-file=prng-reuse\n" + self.SNIPPET
+        sup = engine.Suppressions.scan(src)
+        assert all(sup.covers(f)
+                   for f in astchecks.check_source(src, "s.py"))
+
+    def test_unrelated_rule_not_covered(self):
+        sup = engine.Suppressions.scan(self.SNIPPET)
+        other = engine.Finding("mutable-default", "s.py", 5, "x")
+        assert not sup.covers(other)
+
+    def test_report_separates_suppressed(self):
+        findings = astchecks.check_source(self.SNIPPET, "s.py")
+        rep = engine.Report()
+        rep.extend(findings, engine.Suppressions.scan(self.SNIPPET))
+        assert rep.ok and rep.suppressed
+
+
+# ---------------------------------------------------------------- layer 2
+BAD_KERNEL = textwrap.dedent("""
+    import jax
+    from jax.experimental import pallas as pl
+    BLOCK = 96
+    def _body(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+    def run(x):
+        return pl.pallas_call(
+            _body,
+            grid=(x.shape[0] // BLOCK,),
+            in_specs=[pl.BlockSpec((BLOCK, 70000), lambda i: (i, 0))],
+            out_specs=pl.BlockSpec((BLOCK, 70000), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        )(x)
+""")
+
+
+class TestPallasContracts:
+    def _mk(self, tmp_path: Path, kernel=BAD_KERNEL,
+            ref="def run_ref(x, extra):\n    return x\n", ops="x = 1\n"):
+        pkg = tmp_path / "kernels" / "badk"
+        pkg.mkdir(parents=True)
+        if kernel is not None:
+            (pkg / "kernel.py").write_text(kernel)
+        if ref is not None:
+            (pkg / "ref.py").write_text(ref)
+        if ops is not None:
+            (pkg / "ops.py").write_text(ops)
+        return tmp_path / "kernels"
+
+    def _rules(self, root, tmp_path):
+        out = set()
+        for entry in pc.check_kernels_root(root, tmp_path):
+            out |= {f.rule for f in entry["findings"]}
+        return out
+
+    def test_missing_triplet_member(self, tmp_path):
+        root = self._mk(tmp_path, ops=None)
+        assert self._rules(root, tmp_path) == {"pallas-triplet"}
+
+    def test_bad_kernel_all_rules(self, tmp_path):
+        rules = self._rules(self._mk(tmp_path), tmp_path)
+        assert {"pallas-interpret", "pallas-lane", "pallas-divisibility",
+                "pallas-vmem", "kernel-ref-signature"} <= rules
+
+    def test_good_kernel_clean(self, tmp_path):
+        good = textwrap.dedent("""
+            import jax
+            from jax.experimental import pallas as pl
+            BLOCK = 256
+            def _body(x_ref, o_ref):
+                o_ref[...] = x_ref[...]
+            def run(x, *, block=BLOCK, interpret=False):
+                m, n = x.shape
+                assert m % block == 0
+                return pl.pallas_call(
+                    _body,
+                    grid=(m // block,),
+                    in_specs=[pl.BlockSpec((block, 128), lambda i: (i, 0))],
+                    out_specs=pl.BlockSpec((block, 128), lambda i: (i, 0)),
+                    out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+                    interpret=interpret,
+                )(x)
+        """)
+        ref = "def run_ref(x):\n    return x\n"
+        root = self._mk(tmp_path, kernel=good, ref=ref)
+        assert not self._rules(root, tmp_path)
+
+    def test_real_kernels_clean(self):
+        repo = Path(__file__).resolve().parents[1]
+        root = repo / "src" / "repro" / "kernels"
+        entries = pc.check_kernels_root(root, repo)
+        assert len(entries) >= 4        # quantize, flash, mlstm, rglru
+        assert not [f for e in entries for f in e["findings"]]
+
+
+# ---------------------------------------------------------------- layer 3
+class TestShapeAudit:
+    def test_real_tree_clean(self):
+        from tools.reprolint import shape_audit
+        assert shape_audit.audit_cnn() == []
+
+    def test_tampered_formula_caught(self, monkeypatch):
+        from repro.models import cnn
+        from tools.reprolint import shape_audit
+        real = cnn.cut_activation_size
+        monkeypatch.setattr(cnn, "cut_activation_size",
+                            lambda cfg, b, cut=None: real(cfg, b, cut) + 7)
+        rules = {f.rule for f in shape_audit.audit_cnn()}
+        assert "comm-cut-size" in rules
+
+    def test_lying_codec_caught(self):
+        from repro.compress.codecs import UniformQuantCodec
+        from repro.core.comm import comm_for_cnn
+        from repro.configs.phsfl_cnn import CONFIG
+        from repro.compress import LinkCodecs
+        from tools.reprolint import shape_audit
+
+        class LyingCodec(UniformQuantCodec):
+            def payload_bits(self, n_elements):
+                return super().payload_bits(n_elements) - 1
+
+        codecs = LinkCodecs(activations=LyingCodec())
+        comm = comm_for_cnn(CONFIG, 1000, codecs=codecs)
+        findings = shape_audit._check_bits(comm, codecs, "<fixture>")
+        assert any(f.rule == "comm-bits" for f in findings)
+
+    def test_lm_audit_clean_without_concrete_params(self):
+        import jax
+        from repro.configs.registry import ARCHS
+        from tools.reprolint import shape_audit
+
+        cfg = ARCHS["xlstm-350m"]
+        with jax.checking_leaks():
+            assert shape_audit.audit_lm(cfg, seq_len=32) == []
+
+    def test_encdec_audits_default_cut_only(self):
+        from repro.configs.registry import ARCHS
+        from tools.reprolint import shape_audit
+
+        cfg = ARCHS["seamless-m4t-medium"]
+        assert shape_audit.lm_cut_candidates(cfg) == (None,)
+        assert shape_audit.audit_lm(cfg, seq_len=32) == []
+
+
+# ------------------------------------------------------------- CLI + JSON
+class TestCli:
+    def test_json_report_and_exit_code(self, tmp_path):
+        bad = tmp_path / "bad.py"
+        bad.write_text("def f(x, acc=[]):\n    return acc\n")
+        out = tmp_path / "report.json"
+        from tools.reprolint.__main__ import main
+        rc = main([str(bad), "--json", str(out), "--no-shape-audit"])
+        assert rc == 1
+        rep = json.loads(out.read_text())
+        assert rep["counts"] == {"mutable-default": 1}
+        assert not rep["ok"] and rep["files_checked"] == 1
+        assert rep["findings"][0]["rule"] == "mutable-default"
+
+    def test_clean_file_exits_zero(self, tmp_path):
+        good = tmp_path / "good.py"
+        good.write_text("def f(x):\n    return x\n")
+        from tools.reprolint.__main__ import main
+        assert main([str(good), "--no-shape-audit"]) == 0
+
+    def test_rule_catalog_matches_readme(self):
+        repo = Path(__file__).resolve().parents[1]
+        readme = (repo / "tools" / "reprolint" / "README.md").read_text()
+        for rule_id in engine.RULES:
+            assert f"`{rule_id}`" in readme, f"{rule_id} missing from README"

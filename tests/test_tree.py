@@ -1,0 +1,102 @@
+"""utils/tree.py: path rendering, masking, and round-trip identities."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import tree as tu
+
+
+@pytest.fixture()
+def params():
+    return {
+        "embed": {"table": jnp.ones((8, 4))},
+        "stage0": {"b0": {"w": jnp.ones((4, 4)), "b": jnp.zeros((4,))}},
+        "head": {"w": jnp.full((4, 2), 2.0)},
+    }
+
+
+class TestPaths:
+    def test_tree_paths(self, params):
+        paths = tu.tree_paths(params)
+        assert "embed/table" in paths and "stage0/b0/w" in paths
+        assert len(paths) == len(jax.tree.leaves(params))
+
+    def test_map_with_path_preserves_structure(self, params):
+        seen = []
+        out = tu.map_with_path(lambda p, x: seen.append(p) or x * 2, params)
+        assert sorted(seen) == sorted(tu.tree_paths(params))
+        assert jax.tree.structure(out) == jax.tree.structure(params)
+        np.testing.assert_array_equal(out["head"]["w"],
+                                      params["head"]["w"] * 2)
+
+    def test_mask_by_path(self, params):
+        mask = tu.mask_by_path(params, [r"^embed(/|$)"])
+        flat = dict(zip(tu.tree_paths(mask), jax.tree.leaves(mask)))
+        assert flat["embed/table"] is True
+        assert flat["head/w"] is False
+
+
+class TestRoundTrips:
+    def test_flatten_unflatten_identity(self, params):
+        leaves, treedef = jax.tree.flatten(params)
+        back = jax.tree.unflatten(treedef, leaves)
+        assert jax.tree.structure(back) == jax.tree.structure(params)
+        for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(params)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_merge_select_round_trip(self, params):
+        mask = tu.mask_by_path(params, [r"^stage0(/|$)"])
+        zeros = tu.tree_zeros_like(params)
+        merged = tu.merge_trees(mask, params, zeros)
+        # merging the selected part back over zeros keeps exactly that part
+        np.testing.assert_array_equal(merged["stage0"]["b0"]["w"],
+                                      params["stage0"]["b0"]["w"])
+        np.testing.assert_array_equal(merged["head"]["w"],
+                                      np.zeros_like(params["head"]["w"]))
+        # and merging twice is idempotent
+        again = tu.merge_trees(mask, merged, zeros)
+        for a, b in zip(jax.tree.leaves(again), jax.tree.leaves(merged)):
+            np.testing.assert_array_equal(a, b)
+
+    def test_add_scale_inverse(self, params):
+        doubled = tu.tree_add(params, params)
+        halved = tu.tree_scale(doubled, 0.5)
+        assert float(tu.tree_l2_distance(halved, params)) == pytest.approx(
+            0.0, abs=1e-6)
+
+    def test_weighted_sum_matches_manual(self, params):
+        other = tu.tree_scale(params, 3.0)
+        ws = tu.tree_weighted_sum([params, other], [0.25, 0.75])
+        expect = tu.tree_add(tu.tree_scale(params, 0.25),
+                             tu.tree_scale(other, 0.75))
+        assert float(tu.tree_l2_distance(ws, expect)) == pytest.approx(
+            0.0, abs=1e-6)
+
+
+class TestSizes:
+    def test_tree_size_counts_elements(self, params):
+        assert tu.tree_size(params) == 8 * 4 + 4 * 4 + 4 + 4 * 2
+
+    def test_tree_bytes_counts_dtype_width(self, params):
+        assert tu.tree_bytes(params) == 4 * tu.tree_size(params)
+
+    def test_allfinite(self, params):
+        assert bool(tu.tree_allfinite(params))
+        bad = dict(params, head={"w": jnp.array([np.nan, 1.0])})
+        assert not bool(tu.tree_allfinite(bad))
+
+
+class TestAxesLeaves:
+    def test_axes_leaf_detection(self):
+        assert tu.axes_leaf(("embed", "mlp"))
+        assert tu.axes_leaf((None, "mlp"))
+        assert not tu.axes_leaf(("embed", 3))
+        assert not tu.axes_leaf([1, 2])
+
+    def test_map_with_path_over_axes_tree(self):
+        axes = {"fc1": {"w": (None, "mlp"), "b": ("mlp",)}}
+        paths = tu.tree_paths(axes, is_leaf=tu.axes_leaf)
+        assert sorted(paths) == ["fc1/b", "fc1/w"]

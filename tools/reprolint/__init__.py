@@ -1,0 +1,19 @@
+"""reprolint: JAX/Pallas-aware static analysis for this repo's contracts.
+
+Three layers (see README.md for the rule catalog):
+
+1. AST checkers      (tools.reprolint.astchecks)       — PRNG discipline,
+   host-numpy-in-jit, static-arg hashability, mutable defaults, float64;
+2. Pallas contracts  (tools.reprolint.pallas_contracts) — kernel/ref/ops
+   triplets, interpret fallbacks, lane widths, tiling asserts, VMEM budget;
+3. Shape audit       (tools.reprolint.shape_audit)      — CommModel Z_0/Z_c
+   bit accounting vs jax.eval_shape, per registry config × cut candidate.
+
+Run as ``python -m tools.reprolint src tests benchmarks examples``.
+"""
+
+from tools.reprolint.engine import (Finding, Report, Rule, RULES,
+                                    Suppressions, python_files)
+
+__all__ = ["Finding", "Report", "Rule", "RULES", "Suppressions",
+           "python_files"]

@@ -1,0 +1,122 @@
+"""reprolint CLI — the tier-0 gate.
+
+    python -m tools.reprolint src tests benchmarks examples
+    python -m tools.reprolint --json report.json src
+    python -m tools.reprolint --list-rules
+
+Exit status 0 iff no non-suppressed finding survives.  Layer 2 runs on any
+``kernels/`` package found under the given paths; layer 3 (the eval_shape
+accounting audit) runs whenever the repo's ``src/repro`` is in scope and
+can be disabled with ``--no-shape-audit`` (it imports jax and traces every
+registry config, which the pure-AST layers never need).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from tools.reprolint import astchecks, engine
+from tools.reprolint import pallas_contracts
+
+
+def _find_kernels_roots(paths: list[str], root: Path) -> list[Path]:
+    roots: set[Path] = set()
+    for p in paths:
+        pp = Path(p)
+        if not pp.is_absolute():
+            pp = root / pp
+        if not pp.is_dir():
+            continue
+        if pp.name == "kernels":
+            roots.add(pp)
+        roots.update(d for d in pp.rglob("kernels") if d.is_dir())
+    return sorted(roots)
+
+
+def _covers_repro_src(paths: list[str], root: Path) -> bool:
+    for p in paths:
+        pp = Path(p)
+        if not pp.is_absolute():
+            pp = root / pp
+        if (pp / "repro").is_dir() or pp.name == "repro":
+            return True
+    return False
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="static analysis for the repo's JAX/Pallas/accounting "
+                    "contracts (tier-0 gate)")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help="files or directories to check "
+                         "(default: src tests benchmarks examples)")
+    ap.add_argument("--json", metavar="FILE", default=None,
+                    help="write the JSON report to FILE ('-' for stdout)")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalog and exit")
+    ap.add_argument("--vmem-budget-mib", type=float, default=16.0,
+                    help="per-program VMEM budget for pallas-vmem (MiB)")
+    ap.add_argument("--no-shape-audit", action="store_true",
+                    help="skip the eval_shape accounting audit (layer 3)")
+    ap.add_argument("--seq-len", type=int, default=64,
+                    help="abstract sequence length for the LM shape audit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        width = max(len(r) for r in engine.RULES)
+        for rule in engine.RULES.values():
+            print(f"{rule.id:<{width}}  [{rule.layer}]  {rule.summary}")
+        return 0
+
+    root = Path.cwd()
+    paths = args.paths or ["src", "tests", "benchmarks", "examples"]
+    report = engine.Report()
+
+    # layer 1: AST checks on every python file in scope
+    for f in engine.python_files(paths, root):
+        source = f.read_text()
+        rel = engine.relpath(f, root)
+        report.files_checked += 1
+        report.extend(astchecks.check_source(source, rel),
+                      engine.Suppressions.scan(source))
+
+    # layer 2: pallas kernel contracts on every kernels/ package in scope
+    budget = int(args.vmem_budget_mib * 1024 * 1024)
+    for kroot in _find_kernels_roots(paths, root):
+        for entry in pallas_contracts.check_kernels_root(
+                kroot, root, vmem_budget=budget):
+            sup = None
+            if entry["path"] is not None:
+                sup = engine.Suppressions.scan(entry["path"].read_text())
+            report.extend(entry["findings"], sup)
+
+    # layer 3: eval_shape accounting audit (needs the repro package)
+    if not args.no_shape_audit and _covers_repro_src(paths, root):
+        src = root / "src"
+        if src.is_dir() and str(src) not in sys.path:
+            sys.path.insert(0, str(src))
+        from tools.reprolint import shape_audit
+        findings, checked = shape_audit.audit_all(seq_len=args.seq_len)
+        report.extend(findings, None)
+        print(f"shape audit: {checked} configs x cut candidates checked",
+              file=sys.stderr)
+
+    if args.json:
+        if args.json == "-":
+            print(report.to_json())
+        else:
+            Path(args.json).write_text(report.to_json() + "\n")
+
+    for f in report.findings:
+        print(f.render())
+    n, s = len(report.findings), len(report.suppressed)
+    print(f"reprolint: {report.files_checked} files, {n} finding(s), "
+          f"{s} suppressed", file=sys.stderr)
+    return 0 if report.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

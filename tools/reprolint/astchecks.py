@@ -1,0 +1,458 @@
+"""Layer 1: AST checkers for JAX-specific hazards.
+
+These are heuristic, purely syntactic checks — no imports are executed.
+Each checker errs toward precision (few false positives) because the lint
+gate fails CI on any non-suppressed finding; anything genuinely intentional
+carries a ``# reprolint: disable=<rule>`` with a justification comment.
+
+Rules (see engine.RULES / README.md):
+
+- ``prng-reuse``        — one PRNG key variable consumed by two sampler
+  calls without an intervening ``split``/``fold_in``/reassignment.  Loop
+  bodies are simulated twice, so a sampler drawing from a loop-invariant
+  key is caught (it would replay identical noise every iteration — the
+  order-dependent-flake class of bug).
+- ``lossy-codec-no-key`` — a codec-style ``.apply``/``.encode`` (or
+  ``quantize_dequantize``) call whose key argument is the literal ``None``:
+  the stochastic path would silently fall back to fixed rounding noise.
+- ``host-np-in-jit``    — a host ``np.*`` call inside a jit-decorated
+  function or a Pallas kernel body (concrete numpy ops break under tracing
+  or silently constant-fold the trace-time value).
+- ``nonfrozen-static``  — a non-frozen dataclass annotation on a parameter
+  named in ``static_argnames`` (unhashable static args fail inside jit,
+  far from the definition).
+- ``mutable-default``   — list/dict/set default arguments.
+- ``float64-literal``   — explicit float64 dtypes in accelerator code;
+  jax runs x64-disabled, so these silently truncate to float32.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.reprolint.engine import Finding
+
+# jax.random.* calls that DERIVE keys rather than consuming them
+_DERIVERS = {"split", "fold_in", "PRNGKey", "key", "key_data",
+             "wrap_key_data", "clone", "fold_in_str"}
+# bare sampler names treated as consumers even without a jax.random. prefix
+_SAMPLERS = {"uniform", "normal", "bernoulli", "truncated_normal",
+             "categorical", "gumbel", "exponential", "choice", "randint",
+             "permutation", "poisson", "laplace", "beta", "gamma",
+             "dirichlet", "rademacher", "bits", "ball", "orthogonal",
+             "t", "cauchy", "logistic", "maxwell", "multivariate_normal"}
+
+
+def _attr_chain(node: ast.AST) -> list[str]:
+    """['jax', 'random', 'uniform'] for jax.random.uniform; [] if not a
+    plain name/attribute chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return []
+
+
+def check_source(source: str, path: str) -> list[Finding]:
+    try:
+        tree = ast.parse(source)
+    except SyntaxError as e:
+        return [Finding("host-np-in-jit", path, e.lineno or 0,
+                        f"file does not parse: {e.msg}")]
+    out: list[Finding] = []
+    out += _check_prng_reuse(tree, path)
+    out += _check_codec_key(tree, path)
+    out += _check_np_in_jit(tree, path)
+    out += _check_nonfrozen_static(tree, path)
+    out += _check_mutable_default(tree, path)
+    out += _check_float64(tree, path)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# prng-reuse
+# ---------------------------------------------------------------------------
+def _is_sampler_call(call: ast.Call) -> bool:
+    chain = _attr_chain(call.func)
+    if not chain:
+        return False
+    name = chain[-1]
+    if name in _DERIVERS:
+        return False
+    if len(chain) >= 2 and chain[-2] == "random":
+        return True          # jax.random.<anything non-deriving>
+    return name in _SAMPLERS
+
+
+def _is_deriver_call(call: ast.Call) -> bool:
+    chain = _attr_chain(call.func)
+    return bool(chain) and chain[-1] in _DERIVERS
+
+
+def _key_args(call: ast.Call):
+    """Bare-name arguments of a sampler call (candidate key variables).
+
+    Only the first positional argument (or an explicit ``key=``) is the key
+    slot in every jax.random sampler signature; later args are shapes,
+    bounds, and dtypes."""
+    names = []
+    if call.args and isinstance(call.args[0], ast.Name):
+        names.append(call.args[0].id)
+    for kw in call.keywords:
+        if kw.arg == "key" and isinstance(kw.value, ast.Name):
+            names.append(kw.value.id)
+    return names
+
+
+class _KeyState:
+    """Names consumed so far -> line of first consumption."""
+
+    def __init__(self):
+        self.consumed: dict[str, int] = {}
+
+    def copy(self) -> "_KeyState":
+        s = _KeyState()
+        s.consumed = dict(self.consumed)
+        return s
+
+    def merge(self, other: "_KeyState"):
+        for k, v in other.consumed.items():
+            self.consumed.setdefault(k, v)
+
+
+def _walk_stmts(stmts, state: _KeyState, path: str, out, seen):
+    for st in stmts:
+        _walk_stmt(st, state, path, out, seen)
+
+
+def _expr_calls(node: ast.AST):
+    """Calls in an expression, outermost-first, skipping nested defs."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Call):
+            yield sub
+
+
+def _consume_in_expr(node: ast.AST, state: _KeyState, path: str, out, seen):
+    for call in _expr_calls(node):
+        if _is_deriver_call(call):
+            # split(key)/fold_in(key, …) re-derive: the base key may be
+            # reused afterwards (the canonical chain pattern)
+            for name in _key_args(call):
+                state.consumed.pop(name, None)
+            continue
+        if not _is_sampler_call(call):
+            continue
+        for name in _key_args(call):
+            if name in state.consumed:
+                tag = (path, call.lineno, name)
+                if tag not in seen:
+                    seen.add(tag)
+                    out.append(Finding(
+                        "prng-reuse", path, call.lineno,
+                        f"key {name!r} already consumed at line "
+                        f"{state.consumed[name]}; split/fold_in before "
+                        f"drawing again"))
+            else:
+                state.consumed[name] = call.lineno
+
+
+def _assigned_names(target: ast.AST):
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            yield from _assigned_names(elt)
+
+
+def _walk_stmt(st: ast.stmt, state: _KeyState, path: str, out, seen):
+    if isinstance(st, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        inner = _KeyState()
+        _walk_stmts(st.body, inner, path, out, seen)
+        return
+    if isinstance(st, ast.ClassDef):
+        _walk_stmts(st.body, _KeyState(), path, out, seen)
+        return
+    if isinstance(st, (ast.If,)):
+        _consume_in_expr(st.test, state, path, out, seen)
+        a, b = state.copy(), state.copy()
+        _walk_stmts(st.body, a, path, out, seen)
+        _walk_stmts(st.orelse, b, path, out, seen)
+        state.merge(a)
+        state.merge(b)
+        return
+    if isinstance(st, (ast.For, ast.AsyncFor, ast.While)):
+        if isinstance(st, ast.While):
+            _consume_in_expr(st.test, state, path, out, seen)
+        else:
+            _consume_in_expr(st.iter, state, path, out, seen)
+            for name in _assigned_names(st.target):
+                state.consumed.pop(name, None)
+        # simulate two iterations: a key consumed on pass 1 and not
+        # re-derived before pass 2 replays identical noise every iteration
+        _walk_stmts(st.body, state, path, out, seen)
+        _walk_stmts(st.body, state, path, out, seen)
+        _walk_stmts(st.orelse, state, path, out, seen)
+        return
+    if isinstance(st, (ast.With, ast.AsyncWith)):
+        _walk_stmts(st.body, state, path, out, seen)
+        return
+    if isinstance(st, ast.Try):
+        _walk_stmts(st.body, state, path, out, seen)
+        for h in st.handlers:
+            _walk_stmts(h.body, state.copy(), path, out, seen)
+        _walk_stmts(st.orelse, state, path, out, seen)
+        _walk_stmts(st.finalbody, state, path, out, seen)
+        return
+    # plain statement: evaluate RHS first, then clear reassigned names
+    for node in ast.iter_child_nodes(st):
+        _consume_in_expr(node, state, path, out, seen)
+    if isinstance(st, ast.Assign):
+        for t in st.targets:
+            for name in _assigned_names(t):
+                state.consumed.pop(name, None)
+    elif isinstance(st, (ast.AnnAssign, ast.AugAssign)):
+        for name in _assigned_names(st.target):
+            state.consumed.pop(name, None)
+
+
+def _check_prng_reuse(tree: ast.Module, path: str) -> list[Finding]:
+    out: list[Finding] = []
+    _walk_stmts(tree.body, _KeyState(), path, out, set())
+    return out
+
+
+# ---------------------------------------------------------------------------
+# lossy-codec-no-key
+# ---------------------------------------------------------------------------
+def _check_codec_key(tree: ast.Module, path: str) -> list[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if not chain:
+            continue
+        name = chain[-1]
+        key_arg = None
+        if name in ("apply", "encode") and len(chain) >= 2:
+            # codec API: first positional argument is the key
+            if node.args:
+                key_arg = node.args[0]
+        elif name == "quantize_dequantize":
+            if len(node.args) >= 2:
+                key_arg = node.args[1]
+        for kw in node.keywords:
+            if kw.arg == "key":
+                key_arg = kw.value
+        if (key_arg is not None and isinstance(key_arg, ast.Constant)
+                and key_arg.value is None):
+            out.append(Finding(
+                "lossy-codec-no-key", path, node.lineno,
+                f"{'.'.join(chain)}(...) passes key=None: a lossy codec "
+                f"would silently reuse fixed rounding noise; thread a real "
+                f"key (or guard the lossless case explicitly)"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# host-np-in-jit
+# ---------------------------------------------------------------------------
+def _is_jit_decorator(dec: ast.AST) -> bool:
+    chain = _attr_chain(dec)
+    if chain and chain[-1] == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        chain = _attr_chain(dec.func)
+        if chain and chain[-1] == "jit":
+            return True
+        if chain and chain[-1] == "partial" and dec.args:
+            inner = _attr_chain(dec.args[0])
+            return bool(inner) and inner[-1] == "jit"
+    return False
+
+
+def _pallas_kernel_names(tree: ast.Module) -> set[str]:
+    """Function names passed (possibly via functools.partial) as the first
+    argument to a pallas_call, plus names bound to such partials."""
+    partial_of: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if (isinstance(node, ast.Assign) and isinstance(node.value, ast.Call)
+                and len(node.targets) == 1
+                and isinstance(node.targets[0], ast.Name)):
+            chain = _attr_chain(node.value.func)
+            if chain and chain[-1] == "partial" and node.value.args:
+                inner = _attr_chain(node.value.args[0])
+                if inner:
+                    partial_of[node.targets[0].id] = inner[-1]
+    names: set[str] = set()
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        if not (chain and chain[-1] == "pallas_call" and node.args):
+            continue
+        first = node.args[0]
+        if isinstance(first, ast.Name):
+            names.add(partial_of.get(first.id, first.id))
+        elif isinstance(first, ast.Call):           # partial(kernel, ...)
+            fchain = _attr_chain(first.func)
+            if fchain and fchain[-1] == "partial" and first.args:
+                inner = _attr_chain(first.args[0])
+                if inner:
+                    names.add(inner[-1])
+    return names
+
+
+def _check_np_in_jit(tree: ast.Module, path: str) -> list[Finding]:
+    kernels = _pallas_kernel_names(tree)
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        jitted = any(_is_jit_decorator(d) for d in node.decorator_list)
+        is_kernel = node.name in kernels
+        if not (jitted or is_kernel):
+            continue
+        where = "Pallas kernel body" if is_kernel else "jit-decorated function"
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            chain = _attr_chain(sub.func)
+            if len(chain) >= 2 and chain[0] in ("np", "numpy"):
+                out.append(Finding(
+                    "host-np-in-jit", path, sub.lineno,
+                    f"host numpy call {'.'.join(chain)}() inside "
+                    f"{where} {node.name!r}: this constant-folds at trace "
+                    f"time (or fails on tracers); use jnp/lax, or hoist it "
+                    f"out of the traced region"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# nonfrozen-static
+# ---------------------------------------------------------------------------
+def _dataclass_frozen(dec: ast.AST) -> bool | None:
+    """True/False if ``dec`` is a dataclass decorator; None otherwise."""
+    chain = _attr_chain(dec)
+    if chain and chain[-1] == "dataclass":
+        return False
+    if isinstance(dec, ast.Call):
+        chain = _attr_chain(dec.func)
+        if chain and chain[-1] == "dataclass":
+            for kw in dec.keywords:
+                if (kw.arg == "frozen" and isinstance(kw.value, ast.Constant)
+                        and kw.value.value is True):
+                    return True
+            return False
+    return None
+
+
+def _static_argnames_of(dec: ast.AST):
+    """The static_argnames tuple of a jit decorator, if resolvable."""
+    if not isinstance(dec, ast.Call):
+        return None
+    chain = _attr_chain(dec.func)
+    is_jit = chain and chain[-1] == "jit"
+    is_partial_jit = (chain and chain[-1] == "partial" and dec.args
+                      and (c := _attr_chain(dec.args[0])) and c[-1] == "jit")
+    if not (is_jit or is_partial_jit):
+        return None
+    for kw in dec.keywords:
+        if kw.arg == "static_argnames":
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return (v.value,)
+            if isinstance(v, (ast.Tuple, ast.List)):
+                return tuple(e.value for e in v.elts
+                             if isinstance(e, ast.Constant))
+    return None
+
+
+def _check_nonfrozen_static(tree: ast.Module, path: str) -> list[Finding]:
+    nonfrozen: dict[str, int] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            for d in node.decorator_list:
+                fr = _dataclass_frozen(d)
+                if fr is False:
+                    nonfrozen[node.name] = node.lineno
+    if not nonfrozen:
+        return []
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for d in node.decorator_list:
+            statics = _static_argnames_of(d)
+            if not statics:
+                continue
+            args = node.args.posonlyargs + node.args.args + node.args.kwonlyargs
+            for a in args:
+                if a.arg not in statics or a.annotation is None:
+                    continue
+                ann = _attr_chain(a.annotation)
+                if ann and ann[-1] in nonfrozen:
+                    out.append(Finding(
+                        "nonfrozen-static", path, node.lineno,
+                        f"static arg {a.arg!r} of {node.name!r} is a "
+                        f"non-frozen dataclass {ann[-1]!r} (defined line "
+                        f"{nonfrozen[ann[-1]]}): static_argnames require "
+                        f"hashable values — mark it frozen=True"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# mutable-default
+# ---------------------------------------------------------------------------
+def _is_mutable_literal(node: ast.AST) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set)):
+        return True
+    if isinstance(node, ast.Call):
+        chain = _attr_chain(node.func)
+        return bool(chain) and chain[-1] in ("list", "dict", "set")
+    return False
+
+
+def _check_mutable_default(tree: ast.Module, path: str) -> list[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                                 ast.Lambda)):
+            continue
+        name = getattr(node, "name", "<lambda>")
+        for default in (list(node.args.defaults)
+                        + [d for d in node.args.kw_defaults if d]):
+            if _is_mutable_literal(default):
+                out.append(Finding(
+                    "mutable-default", path, default.lineno,
+                    f"mutable default argument in {name!r}: shared across "
+                    f"calls — default to None and construct inside"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# float64-literal
+# ---------------------------------------------------------------------------
+def _check_float64(tree: ast.Module, path: str) -> list[Finding]:
+    out = []
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Attribute) and node.attr == "float64":
+            chain = _attr_chain(node)
+            if chain and chain[0] in ("jnp", "jax"):
+                out.append(Finding(
+                    "float64-literal", path, node.lineno,
+                    f"{'.'.join(chain)}: jax runs with x64 disabled, so "
+                    f"this silently becomes float32; use float32 (or np "
+                    f"for genuine host-side double precision)"))
+        if isinstance(node, ast.Call):
+            for kw in node.keywords:
+                if (kw.arg == "dtype" and isinstance(kw.value, ast.Constant)
+                        and kw.value.value == "float64"):
+                    out.append(Finding(
+                        "float64-literal", path, kw.value.lineno,
+                        'dtype="float64" in accelerator code: jax runs '
+                        'x64-disabled, so this silently becomes float32'))
+    return out

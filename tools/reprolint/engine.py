@@ -1,0 +1,164 @@
+"""reprolint core: findings, rule registry, suppressions, file walking.
+
+A *rule* is a named static contract (see README.md for the catalog); a
+*checker* is a callable producing :class:`Finding`s.  The engine owns the
+pieces every checker shares: the finding record, the per-line / per-file
+suppression mechanism (``# reprolint: disable=<rule>[,<rule>...]`` and
+``# reprolint: disable-file=<rule>``), source-file discovery, and the
+plain-text / JSON reports.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One static contract the linter enforces."""
+    id: str
+    summary: str
+    layer: str            # "ast" | "pallas" | "shapes"
+
+
+# The rule catalog (kept in sync with README.md; tests assert the sync).
+RULES: dict[str, Rule] = {r.id: r for r in (
+    # --- layer 1: AST checkers -------------------------------------------
+    Rule("prng-reuse", "a PRNG key is consumed by two samplers without an "
+         "intervening split/fold_in/reassignment", "ast"),
+    Rule("lossy-codec-no-key", "a codec encode/apply (or quantize_dequantize)"
+         " call passes key=None on a potentially lossy path", "ast"),
+    Rule("host-np-in-jit", "host-side numpy call inside a jit-decorated "
+         "function or a Pallas kernel body", "ast"),
+    Rule("nonfrozen-static", "a non-frozen dataclass flows into jit "
+         "static_argnames (unhashable static arg)", "ast"),
+    Rule("mutable-default", "mutable default argument (list/dict/set) in a "
+         "function signature", "ast"),
+    Rule("float64-literal", "explicit float64 dtype in accelerator code "
+         "(jax default is x64-disabled; this silently truncates)", "ast"),
+    # --- layer 2: Pallas kernel contracts --------------------------------
+    Rule("pallas-triplet", "a kernels/<name>/ package is missing one of "
+         "kernel.py / ref.py / ops.py", "pallas"),
+    Rule("pallas-interpret", "a pallas_call has no interpret= fallback "
+         "parameter (kernel cannot run off-TPU)", "pallas"),
+    Rule("pallas-lane", "a resolvable trailing BlockSpec tile dim is not a "
+         "multiple of the 128-wide TPU lane", "pallas"),
+    Rule("pallas-divisibility", "a pallas_call wrapper has no divisibility "
+         "assert guarding its tile grid", "pallas"),
+    Rule("pallas-vmem", "estimated per-program VMEM footprint (blocks + "
+         "scratch at default tile sizes) exceeds the budget", "pallas"),
+    Rule("kernel-ref-signature", "kernel entry and ref oracle public "
+         "signatures do not match", "pallas"),
+    # --- layer 3: shape / accounting audit -------------------------------
+    Rule("comm-cut-size", "CommModel.cut_size disagrees with the abstract "
+         "(eval_shape) cut activation size", "shapes"),
+    Rule("comm-client-params", "CommModel Z_0/Z totals disagree with the "
+         "abstract parameter tree under the split spec", "shapes"),
+    Rule("comm-bits", "CommModel bit accounting violates a payload identity "
+         "for the configured codec", "shapes"),
+)}
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str             # repo-relative where possible
+    line: int             # 1-based; 0 for file/config-level findings
+    message: str
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        return f"{loc}: [{self.rule}] {self.message}"
+
+
+_DISABLE_LINE = re.compile(r"#\s*reprolint:\s*disable=([\w,-]+)")
+_DISABLE_FILE = re.compile(r"#\s*reprolint:\s*disable-file=([\w,-]+)")
+
+
+@dataclass
+class Suppressions:
+    """Which (line, rule) pairs a source file opted out of."""
+    file_rules: set = field(default_factory=set)
+    line_rules: dict = field(default_factory=dict)   # line -> set of rules
+
+    @classmethod
+    def scan(cls, source: str) -> "Suppressions":
+        sup = cls()
+        for i, text in enumerate(source.splitlines(), start=1):
+            m = _DISABLE_FILE.search(text)
+            if m:
+                sup.file_rules.update(m.group(1).split(","))
+            m = _DISABLE_LINE.search(text)
+            if m:
+                sup.line_rules.setdefault(i, set()).update(
+                    m.group(1).split(","))
+        return sup
+
+    def covers(self, finding: Finding) -> bool:
+        if finding.rule in self.file_rules or "all" in self.file_rules:
+            return True
+        rules = self.line_rules.get(finding.line, ())
+        return finding.rule in rules or "all" in rules
+
+
+def python_files(paths: list[str], root: Path | None = None) -> list[Path]:
+    """Expand files/directories into a sorted list of .py files."""
+    root = root or Path.cwd()
+    out: set[Path] = set()
+    for p in paths:
+        pp = Path(p)
+        if not pp.is_absolute():
+            pp = root / pp
+        if pp.is_file() and pp.suffix == ".py":
+            out.add(pp)
+        elif pp.is_dir():
+            out.update(f for f in pp.rglob("*.py"))
+    return sorted(out)
+
+
+def relpath(path: Path, root: Path) -> str:
+    try:
+        return str(path.relative_to(root))
+    except ValueError:
+        return str(path)
+
+
+@dataclass
+class Report:
+    findings: list = field(default_factory=list)     # surviving findings
+    suppressed: list = field(default_factory=list)   # suppressed findings
+    files_checked: int = 0
+
+    def extend(self, findings: list[Finding], sup: Suppressions | None):
+        for f in findings:
+            if sup is not None and sup.covers(f):
+                self.suppressed.append(f)
+            else:
+                self.findings.append(f)
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+    def as_dict(self) -> dict:
+        counts: dict[str, int] = {}
+        for f in self.findings:
+            counts[f.rule] = counts.get(f.rule, 0) + 1
+        return {
+            "tool": "reprolint",
+            "files_checked": self.files_checked,
+            "counts": counts,
+            "findings": [f.as_dict() for f in self.findings],
+            "suppressed": [f.as_dict() for f in self.suppressed],
+            "ok": self.ok,
+        }
+
+    def to_json(self) -> str:
+        return json.dumps(self.as_dict(), indent=2)

@@ -1,0 +1,239 @@
+"""Layer 3: shape / accounting auditor.
+
+The wireless scheduler prices every decision off ``CommModel`` tables —
+``Z_c`` (cut activation elements), ``Z_0``/``Z`` (client / total params)
+and the Remark-1 bit formulas.  Those numbers are *derived twice* in this
+repo: once as closed-form formulas (``cnn.cut_activation_size``,
+``seq_len * d_model``, ``count_parts``) and once implicitly by the actual
+model code.  This auditor cross-checks the two derivations abstractly with
+``jax.eval_shape`` — no concrete parameter is ever materialized — for every
+registry config × cut candidate:
+
+- ``comm-cut-size``      — ``CommModel.cut_size`` vs the traced cut-layer
+  activation shape (CNN: ``client_forward`` under eval_shape; LM: the embed
+  table's trailing dim × seq_len);
+- ``comm-client-params`` — ``Z_0``/``Z`` vs an independent recount of the
+  abstract parameter tree (CNN: top-level client keys; LM: part_masks);
+- ``comm-bits``          — the payload/bit identities: per-codec
+  ``payload_bits`` re-derived from first principles by codec type, plus the
+  Phi_local / Phi_off / Phi_PHSFL (Eq. 17) composition identities.
+
+Findings carry a config-level pseudo-path (``<registry:NAME@cut=C>``), so
+they cannot be line-suppressed — an accounting mismatch has no single
+offending line and must be fixed, not silenced.
+"""
+
+from __future__ import annotations
+
+import math
+
+from tools.reprolint.engine import Finding
+
+CNN_CODEC_NAMES = (None, "fp32", "int8", "int4", "topk", "fp8")
+
+
+def _loc(kind: str, name: str, cut) -> str:
+    return f"<{kind}:{name}@cut={cut}>"
+
+
+def _expected_payload_bits(codec, n: int, omega: int) -> int:
+    """Re-derive what one n-element tensor should cost on the wire, from
+    the codec's *declared fields* rather than its payload_bits method."""
+    from repro.compress.codecs import (Fp8Codec, IdentityCodec, TopKCodec,
+                                       UniformQuantCodec)
+    if codec is None:
+        return n * (omega + 1)
+    if isinstance(codec, UniformQuantCodec):
+        return n * codec.bits + codec.scale_bits
+    if isinstance(codec, TopKCodec):
+        k = max(1, int(n * codec.frac))
+        return k * (codec.value_bits + math.ceil(math.log2(max(n, 2))))
+    if isinstance(codec, Fp8Codec):
+        return n * 8 + codec.scale_bits
+    if isinstance(codec, IdentityCodec):
+        return n * (omega + 1) if codec.bits_per_element is None \
+            else n * codec.bits_per_element
+    raise TypeError(f"unknown codec type {type(codec).__name__}")
+
+
+def _check_bits(comm, codecs, loc: str) -> list[Finding]:
+    """The Remark-1 / Eq.-17 bit identities for one comm model."""
+    out = []
+    n_act = comm.batch_size * comm.cut_size
+    act = codecs.activations if codecs is not None else None
+    grad = codecs.gradients if codecs is not None else None
+    off = codecs.offload if codecs is not None else None
+    checks = [
+        ("phi_activation_up_bits", comm.phi_activation_up_bits(),
+         _expected_payload_bits(act, n_act, comm.omega)),
+        ("phi_grad_down_bits", comm.phi_grad_down_bits(),
+         _expected_payload_bits(grad, n_act, comm.omega)),
+        ("phi_off_bits", comm.phi_off_bits(),
+         _expected_payload_bits(off, comm.client_params, comm.omega)),
+        ("phi_activation_bits", comm.phi_activation_bits(),
+         n_act * (comm.omega + 1)),
+        ("phi_indices_bits", comm.phi_indices_bits(),
+         comm.batch_size
+         * (math.ceil(math.log2(max(comm.dataset_size, 2))) + 1)),
+        ("phi_local_bits", comm.phi_local_bits(),
+         comm.batches_per_epoch * (comm.phi_activation_up_bits()
+                                   + comm.phi_grad_down_bits()
+                                   + comm.phi_indices_bits())),
+        ("phi_phsfl_bits(3)", comm.phi_phsfl_bits(3),
+         3 * comm.phi_local_bits() + 2 * comm.phi_off_bits()),
+        ("phi_hfl_bits", comm.phi_hfl_bits(),
+         2 * comm.total_params * (comm.omega + 1)),
+    ]
+    for name, got, want in checks:
+        if got != want:
+            out.append(Finding(
+                "comm-bits", loc, 0,
+                f"{name} = {got} but the payload identity re-derived from "
+                f"the codec fields gives {want}"))
+    return out
+
+
+def _mask_count(params, mask) -> int:
+    import jax
+    import numpy as np
+    total = 0
+    for leaf, m in zip(jax.tree.leaves(params), jax.tree.leaves(mask)):
+        if m:
+            total += int(np.prod(leaf.shape))
+    return total
+
+
+def audit_cnn(dataset_size: int = 1000) -> list[Finding]:
+    """Every CNN cut candidate × codec preset, abstractly."""
+    import jax
+    import numpy as np
+
+    from repro.compress import link_codecs
+    from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+    from repro.core.comm import comm_for_cnn
+    from repro.models import cnn
+
+    out: list[Finding] = []
+    params = jax.eval_shape(lambda k: cnn.init(k, CNN_CFG),
+                            jax.random.PRNGKey(0))
+    total = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    for cut in cnn.CUT_CANDIDATES:
+        # trace the client block itself: the formula cut_activation_size
+        # must agree with what client_forward actually produces
+        x = jax.ShapeDtypeStruct(
+            (1, CNN_CFG.image_size, CNN_CFG.image_size, CNN_CFG.channels),
+            jax.numpy.float32)
+        o_fp = jax.eval_shape(
+            lambda p, xx, c=cut: cnn.client_forward(p, xx, c), params, x)
+        z_c_traced = int(np.prod(o_fp.shape))
+        client_keys = cnn.client_keys_for(cut)
+        z0_recount = sum(int(np.prod(l.shape))
+                         for k in client_keys
+                         for l in jax.tree.leaves(params[k]))
+        for codec_name in CNN_CODEC_NAMES:
+            codecs = link_codecs(codec_name) if codec_name else None
+            loc = _loc("cnn", f"{CNN_CFG.name}/{codec_name or 'raw'}", cut)
+            comm = comm_for_cnn(CNN_CFG, dataset_size, cut=cut, codecs=codecs)
+            if comm.cut_size != z_c_traced:
+                out.append(Finding(
+                    "comm-cut-size", loc, 0,
+                    f"CommModel.cut_size={comm.cut_size} but eval_shape of "
+                    f"client_forward at cut={cut!r} gives {z_c_traced} "
+                    f"elements per sample"))
+            if comm.client_params != z0_recount:
+                out.append(Finding(
+                    "comm-client-params", loc, 0,
+                    f"Z_0={comm.client_params} but the abstract param tree "
+                    f"holds {z0_recount} elements under client keys "
+                    f"{client_keys}"))
+            if comm.total_params != total:
+                out.append(Finding(
+                    "comm-client-params", loc, 0,
+                    f"Z={comm.total_params} but the abstract param tree "
+                    f"holds {total} elements in total"))
+            out.extend(_check_bits(comm, codecs, loc))
+    return out
+
+
+def lm_cut_candidates(cfg) -> tuple:
+    """The depth candidates the cut controller would price for this arch:
+    the shallowest split (1 block) and the config's own default.  Encoder-
+    decoder archs have a frontend-based split — only the default cut."""
+    if cfg.encdec is not None:
+        return (None,)
+    return tuple(sorted({1, int(cfg.n_client_layers)}))
+
+
+def audit_lm(cfg, seq_len: int = 64, dataset_size: int = 1000) -> list[Finding]:
+    """One LM registry config, every cut candidate, abstractly."""
+    import dataclasses
+
+    import jax
+    import numpy as np
+
+    from repro.core.comm import comm_for_lm
+    from repro.core.split import part_masks, split_spec_for
+    from repro.models import build_model
+
+    out: list[Finding] = []
+    for cut in lm_cut_candidates(cfg):
+        loc = _loc("lm", cfg.name, cut if cut is not None else "default")
+        comm = comm_for_lm(cfg, seq_len, dataset_size, cut=cut)
+        used = cfg if cut is None or cut == cfg.n_client_layers \
+            else dataclasses.replace(cfg, n_client_layers=int(cut))
+        model = build_model(used)
+        params = jax.eval_shape(lambda k: model.init(k), jax.random.PRNGKey(0))
+        # Z_c: the cut tensor is the residual stream, so its trailing dim
+        # must equal the embed table's trailing dim in the abstract tree
+        from repro.utils.tree import map_with_path
+        embed_dims: list[int] = []
+
+        def note_embed(path, leaf):
+            if path.startswith("embed") and len(leaf.shape) >= 2:
+                embed_dims.append(int(leaf.shape[-1]))
+            return leaf
+
+        map_with_path(note_embed, params)
+        if embed_dims and comm.cut_size != seq_len * embed_dims[0]:
+            out.append(Finding(
+                "comm-cut-size", loc, 0,
+                f"CommModel.cut_size={comm.cut_size} but the abstract embed "
+                f"table is {embed_dims[0]}-wide, so the residual-stream cut "
+                f"tensor holds {seq_len * embed_dims[0]} elements per "
+                f"sample at seq_len={seq_len}"))
+        if not embed_dims:
+            out.append(Finding(
+                "comm-cut-size", loc, 0,
+                "no embed/* leaf in the abstract param tree: the auditor "
+                "cannot tie cut_size to the model's residual width"))
+        # Z_0 / Z: recount through the mask path (count_parts is what
+        # comm_for_lm itself used; part_masks + explicit leaf walk is the
+        # independent route to the same partition)
+        masks = part_masks(params, split_spec_for(used))
+        z0 = _mask_count(params, masks["client"])
+        z = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        if comm.client_params != z0:
+            out.append(Finding(
+                "comm-client-params", loc, 0,
+                f"Z_0={comm.client_params} but the client part_mask over "
+                f"the abstract tree selects {z0} elements"))
+        if comm.total_params != z:
+            out.append(Finding(
+                "comm-client-params", loc, 0,
+                f"Z={comm.total_params} but the abstract tree holds {z} "
+                f"elements in total"))
+        out.extend(_check_bits(comm, None, loc))
+    return out
+
+
+def audit_all(seq_len: int = 64, dataset_size: int = 1000,
+              archs: dict | None = None) -> tuple[list[Finding], int]:
+    """CNN + every registry LM config.  Returns (findings, configs_checked)."""
+    from repro.configs.registry import ARCHS
+
+    findings = audit_cnn(dataset_size)
+    checked = 1
+    for cfg in (archs or ARCHS).values():
+        findings.extend(audit_lm(cfg, seq_len, dataset_size))
+        checked += 1
+    return findings, checked
