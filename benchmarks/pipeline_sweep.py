@@ -1,0 +1,193 @@
+"""Pipelined streaming x async-aggregation sweep: serial vs overlapped.
+
+The timeline refactor (``repro.wireless.timeline``) made two scheduler
+upgrades possible: **pipelined streaming** (``WirelessConfig.pipeline``)
+overlaps each minibatch's uplink payload with the next minibatch's compute,
+and **staleness-weighted async aggregation** (``staleness_lambda``) banks a
+deadline-cut straggler's remainder and folds it into a later edge round
+with weight ``alpha_u * lambda**staleness``.  This sweep runs the four
+(serial | pipelined) x (sync | async) cells under ONE tight deadline, one
+channel, one energy budget — the only knobs that differ between cells are
+``pipeline`` and ``staleness_lambda`` — and emits a JSON table: mean round
+time, live participation, stale deliveries, effective participation
+(live + delivered), bits moved, final loss/accuracy (full run).
+
+The acceptance bar of the pipelined-training ISSUE, checked in-run on the
+deterministic static channel (and at test scale in tests/test_pipeline.py):
+
+1. pipelining never hurts — the pipelined cells' mean round time is <= the
+   matching serial cells' (the per-client timeline saves exactly
+   ``(n-1)*min(c, u) >= 0``);
+2. under the tight deadline, ``pipelined+async`` EFFECTIVE participation
+   is strictly greater than ``serial+sync`` at the same energy budget —
+   pipelining rescues clients whose serial compute+tx overshoots the
+   deadline, and async delivery salvages the stragglers even pipelining
+   cannot save.
+
+``--dry-run`` skips training and drives the ParticipationScheduler alone
+(same channel, same byte+FLOP accounting) — seconds, not minutes; the
+tier-1 smoke test and CI invoke this mode so the benchmark cannot rot.
+
+    PYTHONPATH=src python benchmarks/pipeline_sweep.py \
+        [--deadline 3.0] [--compute-gflops 0.5] [--staleness-lambda 0.5] \
+        [--rounds 2] [--dry-run] [--out pipeline_sweep.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.configs.sweeps import sweep_hierarchy, sweep_train, sweep_wireless
+from repro.core.comm import comm_table_for_cnn
+from repro.core.fedsim import FedSim
+from repro.data.synthetic import make_federated_image_data
+from repro.wireless import make_scheduler
+
+# the four cells: the ONLY config deltas are pipeline / staleness_lambda
+MODES = (("serial+sync", False, 0.0), ("pipelined+sync", True, 0.0),
+         ("serial+async", False, None), ("pipelined+async", True, None))
+
+
+def _wireless(pipeline: bool, lam: float, *, channel: str, deadline: float,
+              compute_gflops: float, seed: int):
+    """One cell's scenario: shared sweep channel + tight deadline + random
+    thinning (a banked straggler delivers only on rounds its radio is IDLE,
+    so some unscheduled rounds must exist even on a static channel)."""
+    return sweep_wireless(
+        channel, heterogeneity=0.5, deadline_s=deadline,
+        compute_gflops=compute_gflops, compute_power_w=0.2,
+        selection="random", participation_prob=0.8,
+        pipeline=pipeline, staleness_lambda=lam, seed=seed)
+
+
+def _summarize(mode, network, h, extra):
+    parts = [n["participants"] for n in network] or [0]
+    times = [n["round_time_s"] for n in network] or [0.0]
+    bits = [n["bits"] for n in network] or [0.0]
+    deliv = [n.get("stale_delivered", 0) for n in network] or [0]
+    eff = [p + d for p, d in zip(parts, deliv)]
+    return {
+        "mode": mode,
+        "participation_rate": float(np.mean(parts)) / h.num_clients,
+        "stale_delivered_per_round": float(np.mean(deliv)),
+        "effective_participation_rate": float(np.mean(eff)) / h.num_clients,
+        "mean_round_time_s": float(np.mean(times)),
+        "total_bits": float(np.sum(bits)), **extra,
+    }
+
+
+def run_one(fed, mode: str, pipeline: bool, lam: float, *, rounds: int,
+            seed: int, **kw) -> dict:
+    """One full cell: real training, timeline-priced wireless accounting,
+    staleness folds applied in the aggregation (FedSim)."""
+    h = sweep_hierarchy(rounds)
+    t = sweep_train()
+    sim = FedSim(CNN_CFG, fed, h, t, batches_per_epoch=2, seed=seed,
+                 wireless=_wireless(pipeline, lam, seed=seed, **kw))
+    res = sim.run(rounds=rounds, log_every=rounds)
+    return _summarize(mode, res.network, h, {
+        "final_loss": res.history[-1]["test_loss"],
+        "final_acc": res.history[-1]["test_acc"],
+        "total_sim_time_s": res.total_sim_time_s,
+    })
+
+
+def dry_run_one(mode: str, pipeline: bool, lam: float, *, rounds: int,
+                seed: int, **kw) -> dict:
+    """Scheduler-only cell: same channel + timeline accounting, no
+    training (the aggregation-side fold needs FedSim and is exercised in
+    tests/test_pipeline.py)."""
+    h = sweep_hierarchy(rounds)
+    wireless = _wireless(pipeline, lam, seed=seed, **kw)
+    table = comm_table_for_cnn(CNN_CFG, dataset_size=400,
+                               batch_size=sweep_train().batch_size,
+                               batches_per_epoch=2)
+    sched = make_scheduler(
+        wireless, h.num_clients, kappa0=h.kappa0, comm_table=table,
+        es_assign=np.arange(h.num_clients) // h.clients_per_es)
+    network = []
+    for r in range(rounds * h.kappa1):
+        rep = sched.step(r)
+        row = {"participants": rep.num_participants,
+               "round_time_s": rep.round_time_s, "bits": rep.bits_tx}
+        if rep.stale_delivered is not None:
+            row["stale_delivered"] = int((rep.stale_delivered > 0).sum())
+        network.append(row)
+    return _summarize(mode, network, h, {"dry_run": True})
+
+
+def sweep(fed, lam: float, *, dry_run: bool = False, **kw) -> list[dict]:
+    cells = [(m, p, lam if la is None else la) for m, p, la in MODES]
+    return [dry_run_one(m, p, la, **kw) if dry_run
+            else run_one(fed, m, p, la, **kw) for m, p, la in cells]
+
+
+def check_acceptance(table) -> bool:
+    """(1) pipelining never slows a cell down; (2) pipelined+async beats
+    serial+sync on EFFECTIVE participation, strictly, at equal energy."""
+    rows = {r["mode"]: r for r in table}
+    ok = True
+    for serial, piped in (("serial+sync", "pipelined+sync"),
+                          ("serial+async", "pipelined+async")):
+        ts, tp = (rows[serial]["mean_round_time_s"],
+                  rows[piped]["mean_round_time_s"])
+        good = tp <= ts + 1e-9
+        ok &= good
+        print(f"[{'OK ' if good else 'FAIL'}] round time {piped} {tp:.3f}s "
+              f"<= {serial} {ts:.3f}s")
+    ps = rows["serial+sync"]["effective_participation_rate"]
+    pa = rows["pipelined+async"]["effective_participation_rate"]
+    good = pa > ps
+    ok &= good
+    print(f"[{'OK ' if good else 'FAIL'}] effective participation "
+          f"pipelined+async {pa:.3f} > serial+sync {ps:.3f}")
+    return ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--channels", default="static", dest="channel",
+                    choices=["static", "rayleigh"],
+                    help="channel model shared by all four cells")
+    ap.add_argument("--deadline", type=float, default=3.0,
+                    help="edge-round deadline; tight enough that the serial "
+                         "timeline stragglers while the pipelined one fits")
+    ap.add_argument("--compute-gflops", type=float, default=0.5,
+                    help="per-client compute rate; pipelining gains "
+                         "(n-1)*min(c, u), so compute must be non-trivial")
+    ap.add_argument("--staleness-lambda", type=float, default=0.5,
+                    help="staleness discount of the async cells")
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--alpha", type=float, default=0.3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="scheduler-only sweep: no training, seconds")
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args(argv)
+
+    fed = None
+    if not args.dry_run:
+        fed = make_federated_image_data(8, alpha=args.alpha,
+                                        train_per_class=40,
+                                        test_per_class=20, seed=args.seed)
+    table = sweep(fed, args.staleness_lambda, dry_run=args.dry_run,
+                  channel=args.channel, rounds=args.rounds, seed=args.seed,
+                  deadline=args.deadline,
+                  compute_gflops=args.compute_gflops)
+    print(json.dumps(table, indent=2))
+    ok = check_acceptance(table)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(table, f, indent=2)
+    if not ok:
+        raise SystemExit("ACCEPTANCE FAILED: pipelining slowed a cell down "
+                         "or async did not lift effective participation")
+    return table
+
+
+if __name__ == "__main__":
+    main()

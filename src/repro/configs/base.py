@@ -271,6 +271,24 @@ class WirelessConfig:
     cut_candidates: tuple = ()       # candidate cuts, shallow -> deep: CNN
     #                                  cut names or LM client depths; () ->
     #                                  the model's single default cut
+    # ---- pipelined streaming (repro.wireless.timeline) ----
+    pipeline: bool = False           # overlap client compute with uplink
+    #                                  streaming at minibatch granularity:
+    #                                  each minibatch's activations transmit
+    #                                  as soon as its compute finishes, so
+    #                                  round time ~ max(compute, tx) + one
+    #                                  bubble instead of compute + tx.  False
+    #                                  (default) is the serial Eq.-17 model,
+    #                                  bit-for-bit
+    # ---- staleness-weighted async edge aggregation ----
+    staleness_lambda: float = 0.0    # lambda in [0, 1]: a deadline-cut
+    #                                  straggler's partial update is BANKED
+    #                                  and folded into the edge round where
+    #                                  its remaining bits finally land, with
+    #                                  weight alpha_u * lambda**staleness
+    #                                  (staleness = edge rounds late).  0
+    #                                  (default) reproduces today's hard
+    #                                  dropout bit-for-bit
     # ---- participation policy (scheduler) ----
     deadline_s: float = float("inf")  # edge-round deadline; stragglers drop
     selection: str = "deadline"      # deadline | topk | random

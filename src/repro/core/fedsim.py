@@ -138,6 +138,7 @@ class FedSim:
         # joint (cut, codec) grid search is the controller's accounting-side
         # tool (see benchmarks/compress_sweep.py).
         self.codecs = codecs
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
 
@@ -174,6 +175,12 @@ class FedSim:
                                                 comm, hcfg.kappa0,
                                                 es_assign=es_assign)
         self._edge_round = 0
+        # staleness-weighted async edge aggregation (scheduler banks a
+        # straggler's remainder; we snapshot its stacked params at the
+        # banking round and fold them in at delivery with alpha_u * lambda^s)
+        self.staleness_lambda = (wireless.staleness_lambda
+                                 if self.scheduler is not None else 0.0)
+        self._stale_params = None        # stacked (U, ...) banked snapshots
 
         U, B = hcfg.num_clients, hcfg.num_edge_servers
         self.U, self.B, self.Ub = U, B, hcfg.clients_per_es
@@ -258,13 +265,18 @@ class FedSim:
         self._eval = jax.jit(jax.vmap(cnn.loss_and_acc))
 
     # -------------------------------------------------------------- data --
-    def _sample_minibatches(self, batch_size: int):
-        """One (U, N, ...) stacked minibatch (client-local sampling)."""
+    def _sample_minibatches(self, batch_size: int, rng=None):
+        """One (U, N, ...) stacked minibatch (client-local sampling).
+
+        ``rng`` defaults to the training stream ``self.rng``; personalize
+        passes its own stream so fine-tuning is invariant to how much
+        training preceded it."""
+        rng = self.rng if rng is None else rng
         xs, ys = [], []
         for u in range(self.U):
             x, y = self.data.client_train(u)
-            idx = self.rng.choice(len(x), size=batch_size,
-                                  replace=len(x) < batch_size)
+            idx = rng.choice(len(x), size=batch_size,
+                             replace=len(x) < batch_size)
             xs.append(x[idx])
             ys.append(y[idx])
         return jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys))
@@ -286,39 +298,64 @@ class FedSim:
                 jnp.asarray(np.stack(ws)))
 
     # ------------------------------------------------------- aggregation --
-    def _masked_edge_weights(self, mask):
+    def _masked_edge_weights(self, mask, stale_w=None):
         """(B, Ub) weights: alpha_u renormalized over participants, plus the
         (B,) empty-ES indicator.  A fully-participating ES keeps its alpha_u
         weights EXACTLY (no renormalization round-off), so an all-ones mask
-        reproduces the ideal-network path bit-for-bit."""
+        reproduces the ideal-network path bit-for-bit.
+
+        ``stale_w`` (a (U,) array, lambda**staleness per client whose banked
+        update was DELIVERED this round, 0 elsewhere) adds the async fold:
+        each delivery joins its ES's average with raw weight
+        ``alpha_u * stale_w``, and live + stale weights renormalize to sum
+        to 1 together.  Returns ``(w, sw, empty)`` — ``sw`` is None on the
+        exact synchronous path (``stale_w`` None), and an ES counts as empty
+        only if it has neither a live participant nor a delivery."""
         B, Ub = self.B, self.Ub
         aw = self.alpha_u.reshape(B, Ub)                     # float64
         m = np.asarray(mask, np.float64).reshape(B, Ub) > 0
         raw = np.where(m, aw, 0.0)
-        tot = raw.sum(axis=1, keepdims=True)
-        full = m.all(axis=1, keepdims=True)
-        w = np.where(full, aw, raw / np.where(tot > 0, tot, 1.0))
-        return w, ~m.any(axis=1)
+        if stale_w is None:
+            tot = raw.sum(axis=1, keepdims=True)
+            full = m.all(axis=1, keepdims=True)
+            w = np.where(full, aw, raw / np.where(tot > 0, tot, 1.0))
+            return w, None, ~m.any(axis=1)
+        sw = np.asarray(stale_w, np.float64).reshape(B, Ub)
+        raw_stale = aw * sw
+        tot = (raw + raw_stale).sum(axis=1, keepdims=True)
+        denom = np.where(tot > 0, tot, 1.0)
+        return (raw / denom, raw_stale / denom,
+                ~(m | (sw > 0)).any(axis=1))
 
-    def _edge_aggregate(self, stacked, mask=None, fallback=None):
+    def _edge_aggregate(self, stacked, mask=None, fallback=None, stale=None,
+                        stale_w=None):
         """Eqs. (14)-(15): per-ES weighted average, broadcast back.
 
         With a participation ``mask`` the weights renormalize over the
         participating clients of each ES; an ES with zero participants keeps
         ``fallback`` (its model from before this edge round's local steps).
+        ``stale``/``stale_w`` fold banked straggler snapshots into the same
+        average with weight ``alpha_u * lambda**staleness`` (the staleness-
+        weighted async path — see ``_masked_edge_weights``).
         """
         B, Ub = self.B, self.Ub
         if mask is None:
-            w64, empty = self.alpha_u.reshape(B, Ub), np.zeros(B, bool)
+            w64, sw64 = self.alpha_u.reshape(B, Ub), None
+            empty = np.zeros(B, bool)
         else:
-            w64, empty = self._masked_edge_weights(mask)
+            w64, sw64, empty = self._masked_edge_weights(mask, stale_w)
             assert fallback is not None or not empty.any()
         w = jnp.asarray(w64, jnp.float32)
+        ws = None if sw64 is None else jnp.asarray(sw64, jnp.float32)
 
-        def agg(x, fb=None):
+        def agg(x, fb=None, st=None):
             xr = x.reshape((B, Ub) + x.shape[1:])
             wexp = w.reshape((B, Ub) + (1,) * (x.ndim - 1))
             m = (xr * wexp).sum(axis=1, keepdims=True)
+            if st is not None:
+                swexp = ws.reshape((B, Ub) + (1,) * (x.ndim - 1))
+                m = m + (st.reshape(xr.shape) * swexp).sum(axis=1,
+                                                           keepdims=True)
             out = jnp.broadcast_to(m, xr.shape)
             if fb is not None and empty.any():
                 sel = jnp.asarray(empty).reshape((B, 1) + (1,) * (x.ndim - 1))
@@ -327,6 +364,8 @@ class FedSim:
 
         if mask is None or fallback is None:
             return jax.tree.map(agg, stacked)
+        if stale is not None and ws is not None:
+            return jax.tree.map(agg, stacked, fallback, stale)
         return jax.tree.map(agg, stacked, fallback)
 
     def _global_aggregate(self, stacked, es_mask=None):
@@ -419,9 +458,42 @@ class FedSim:
                     if rep.compute_s is not None and rep.compute_s.any():
                         row["compute_s_max"] = float(rep.compute_s.max())
                         row["compute_j"] = float(rep.compute_j.sum())
+                    # staleness-weighted async fold (lambda > 0 only):
+                    # deliveries read the snapshots banked in EARLIER rounds
+                    # (delivered requires idle, banked requires scheduled,
+                    # so the two sets never overlap within a round), then
+                    # this round's new stragglers are snapshotted BEFORE the
+                    # aggregation overwrites their local models
+                    stale_tree = stale_w = None
+                    if rep.stale_delivered is not None:
+                        deliv = rep.stale_delivered > 0
+                        if deliv.any() and self._stale_params is not None:
+                            lam = self.staleness_lambda
+                            stale_w = np.where(
+                                deliv, lam ** rep.stale_delivered, 0.0)
+                            stale_tree = self._stale_params
+                            es_any |= deliv.reshape(self.B, self.Ub).any(1)
+                        row["stale_banked"] = int(rep.stale_banked.sum())
+                        row["stale_delivered"] = int(deliv.sum())
+                        row["stale_dropped"] = int(rep.stale_dropped.sum())
                     res.network.append(row)
+                    if (rep.stale_banked is not None
+                            and rep.stale_banked.any()):
+                        sel = jnp.asarray(rep.stale_banked)
+                        if self._stale_params is None:
+                            self._stale_params = jax.tree.map(
+                                lambda x: x + 0, stacked)      # materialize
+                        else:
+                            self._stale_params = jax.tree.map(
+                                lambda b, x: jnp.where(
+                                    sel.reshape((self.U,)
+                                                + (1,) * (x.ndim - 1)),
+                                    x, b),
+                                self._stale_params, stacked)
                     stacked = self._edge_aggregate(stacked, mask=rep.mask,
-                                                   fallback=prev)
+                                                   fallback=prev,
+                                                   stale=stale_tree,
+                                                   stale_w=stale_w)
             if sched is None:
                 stacked = self._global_aggregate(stacked)    # Eq. 16
             else:                                            # masked Eq. 16
@@ -459,13 +531,24 @@ class FedSim:
 
     # ----------------------------------------------------- personalize ----
     def personalize(self, global_params, steps: int | None = None):
-        """Eq. (18): per-client head-only fine-tuning of w*."""
+        """Eq. (18): per-client head-only fine-tuning of w*.
+
+        Fine-tuning minibatches come from a DEDICATED rng stream seeded at
+        ``seed + 3`` (disjoint from the training stream ``self.rng`` and
+        from the wireless side's ``seed``/``+1``/``+2`` streams), so the
+        personalized heads depend only on (seed, global_params) — NOT on
+        how many training rounds advanced ``self.rng`` before the call.
+        Sampling from ``self.rng`` here made ``personalize(w)`` return
+        different heads for the same ``w`` depending on the preceding
+        ``run()`` length — an irreproducibility bug, regression-pinned in
+        tests/test_pipeline.py."""
         steps = steps or self.t.finetune_steps
+        rng = np.random.default_rng(self.seed + 3)
         stacked = jax.tree.map(
             lambda x: jnp.broadcast_to(x[None], (self.U,) + x.shape),
             global_params)
         for _ in range(steps):
-            x, y = self._sample_minibatches(self.t.batch_size)
+            x, y = self._sample_minibatches(self.t.batch_size, rng=rng)
             stacked, _ = self._head_ft_step(stacked, x, y)
         xt, yt, wt = self._stacked_test()
         per = self._per_client_eval(stacked, xt, yt, wt)

@@ -112,6 +112,14 @@ def main(argv=None):
     ap.add_argument("--codec-cycles", type=float, default=0.0,
                     help="FLOPs per element crossing a lossy codec "
                          "(encode/decode compute; 0 = codecs compute-free)")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="overlap client compute with uplink streaming at "
+                         "minibatch granularity (repro.wireless.timeline); "
+                         "the deadline/energy gates and the accounting "
+                         "price the overlapped timeline.  Staleness-"
+                         "weighted async aggregation (staleness_lambda) is "
+                         "a FedSim-side fold and is not exposed here — this "
+                         "driver prices the scheduler side only")
     # ---- compression (repro.compress) ----
     ap.add_argument("--codec", default="fp32",
                     choices=["fp32", "int8", "int4", "topk", "fp8"],
@@ -170,6 +178,7 @@ def main(argv=None):
                               compute_heterogeneity=args.compute_heterogeneity,
                               compute_power_w=args.compute_power_w,
                               codec_cycles_per_element=args.codec_cycles,
+                              pipeline=args.pipeline,
                               seed=args.seed)
         comm_kw = dict(seq_len=args.seq,
                        dataset_size=args.rounds * args.local_steps *

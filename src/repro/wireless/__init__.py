@@ -86,6 +86,35 @@ FLOPs, and a compute-starved client is steered to a shallower cut than its
 fast-channel peer (``examples/device_aware_cut.py``,
 ``benchmarks/device_sweep.py``).
 
+Pipelined streaming (``repro.wireless.timeline``):
+
+- ``pipeline``: overlap client compute with uplink streaming at minibatch
+  granularity (Accelerating SFL-style).  Each of the round's ``kappa0 x
+  batches_per_epoch`` minibatch activation payloads transmits as soon as
+  its minibatch's compute finishes and the radio is free, so the uplink
+  finishes at ``c + u + (n-1)*max(c, u) + tail`` instead of the serial
+  ``n*c + n*u + tail`` — round time moves from compute + tx toward
+  max(compute, tx) plus one fill bubble, saving exactly ``(n-1)*min(c, u)``
+  per client (never worse, equal when compute is free or n == 1).  The
+  deadline/energy gates, the charge, the moved-bits ledger, and the cut
+  controller's estimates all price the overlapped timeline.  False
+  (default) is the serial Eq.-17 model, bit-for-bit.
+
+Staleness-weighted async edge aggregation (scheduler + ``core.fedsim``):
+
+- ``staleness_lambda``: lambda in [0, 1].  When > 0, a deadline-cut
+  straggler's undelivered uplink remainder is BANKED; on later rounds in
+  which the client is idle its radio background-pushes the remainder at
+  its private rate inside the round's wall-clock window (energy-charged
+  like any transmission), and when the remainder lands the banked update
+  is folded into THAT round's edge aggregation with weight
+  ``alpha_u * lambda**staleness`` (staleness = edge rounds late, >= 1).
+  A bank dies unfolded when a fresh completed round supersedes it or a
+  newer straggle replaces it.  0 (default) disables the machinery and
+  reproduces hard dropout bit-for-bit.  The aggregation fold lives in the
+  CNN simulator (``FedSim``); the LM launcher prices the scheduler side
+  only.
+
 Participation (``repro.wireless.scheduler.ParticipationScheduler``):
 
 - ``deadline_s``: edge-round deadline; a scheduled client whose simulated
@@ -110,17 +139,20 @@ every path is bit-identical to the ideal-network simulator.
 """
 
 from repro.wireless.channel import (ChannelModel, LinkState, RoundBits,
-                                    client_round_bits)
+                                    client_round_bits, waterfill_shares)
 from repro.wireless.cutter import (CutController, CutSpec, cut_specs,
                                    make_cut_controller)
 from repro.wireless.device import DeviceModel, client_round_flops
 from repro.wireless.scheduler import ParticipationScheduler, RoundReport
+from repro.wireless.timeline import RoundTimeline, build_timeline
 
 __all__ = [
     "ChannelModel", "LinkState", "RoundBits", "client_round_bits",
+    "waterfill_shares",
     "CutController", "CutSpec", "cut_specs", "make_cut_controller",
     "DeviceModel", "client_round_flops",
     "ParticipationScheduler", "RoundReport", "make_scheduler",
+    "RoundTimeline", "build_timeline",
 ]
 
 
@@ -144,7 +176,8 @@ def make_scheduler(cfg, num_clients: int, comm=None, kappa0: int = 1, *,
             comm_table, kappa0, policy=cfg.cut_policy, fixed_cut=fixed_cut,
             deadline_s=cfg.deadline_s, tx_power_w=cfg.tx_power_w,
             compute_power_w=cfg.compute_power_w,
-            codec_cycles_per_element=cfg.codec_cycles_per_element)
+            codec_cycles_per_element=cfg.codec_cycles_per_element,
+            pipeline=cfg.pipeline)
         return ParticipationScheduler(cfg, channel, cutter=cutter,
                                       es_assign=es_assign, device=device)
     bits = client_round_bits(comm, kappa0)

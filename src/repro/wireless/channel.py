@@ -45,9 +45,22 @@ class RoundBits:
     """Bits each client moves in one edge round (split-learning dataflow).
 
     Scalar for a shared fixed cut, or per-client ``(U,)`` arrays when a
-    :class:`repro.wireless.cutter.CutController` picks per-client cuts."""
+    :class:`repro.wireless.cutter.CutController` picks per-client cuts.
+
+    The optional STREAM decomposition carries the minibatch granularity the
+    pipelined timeline needs: the uplink is ``chunks`` equal per-minibatch
+    payloads of ``up_stream`` bits (activations + indices), each eligible to
+    transmit as soon as its minibatch's compute finishes, plus one
+    ``up_tail`` payload (the client-block offload Phi_off) that only ships
+    after the last minibatch.  ``chunks * up_stream + up_tail == uplink``
+    whenever the decomposition is present; legacy two-field construction
+    (``up_stream=None``) degenerates to one monolithic chunk, under which
+    the pipelined timeline equals the serial one exactly."""
     uplink: int | np.ndarray
     downlink: int | np.ndarray
+    up_stream: int | np.ndarray | None = None   # bits per minibatch payload
+    up_tail: int | np.ndarray = 0               # offload bits, after chunks
+    chunks: int = 1                             # kappa0 * batches_per_epoch
 
 
 def client_round_bits(comm: CommModel, kappa0: int) -> RoundBits:
@@ -60,7 +73,9 @@ def client_round_bits(comm: CommModel, kappa0: int) -> RoundBits:
 
     Each payload travels through the CommModel's configured codec
     (repro.compress) — with no codecs this is the original (omega+1)-bit
-    accounting exactly.
+    accounting exactly.  The uplink's minibatch decomposition is recorded
+    (``up_stream``/``up_tail``/``chunks``) so the pipelined timeline can
+    stream each minibatch payload as soon as its compute finishes.
     """
     per_batch_up = comm.phi_activation_up_bits() + comm.phi_indices_bits()
     per_batch_down = comm.phi_grad_down_bits()
@@ -68,6 +83,8 @@ def client_round_bits(comm: CommModel, kappa0: int) -> RoundBits:
     return RoundBits(
         uplink=kappa0 * nb * per_batch_up + comm.phi_off_bits(),
         downlink=kappa0 * nb * per_batch_down + comm.phi_off_bits(),
+        up_stream=per_batch_up, up_tail=comm.phi_off_bits(),
+        chunks=kappa0 * nb,
     )
 
 
@@ -139,12 +156,20 @@ class ChannelModel:
         rate and its share, so the per-ES aggregate never exceeds the ES
         capacity.  ``WirelessConfig.contention`` picks the sharing rule:
         ``"equal"`` gives every active client the same share,
-        ``"proportional"`` weights shares by the clients' PRIVATE rates
-        (proportional-fair: a client with twice the link quality gets twice
-        the pipe, so good channels are not dragged down to the worst
-        client's share).  Inactive clients keep their private rate (they do
-        not transmit, so they occupy no share).  An ideal channel or an
-        infinite ES capacity bypasses contention entirely.
+        ``"proportional"`` weights shares by the clients' PRIVATE rates and
+        WATER-FILLS (:func:`waterfill_shares`): a client whose private link
+        saturates below its proportional share is capped at its link rate
+        and the excess re-shares among its capacity-hungry peers, so a
+        finite pipe is never stranded behind a slow client's cap.  (With
+        private-rate weights the share/limit ratio ``cap / sum(rates)`` is
+        the same for every active client of an ES, so all of them cap
+        together or none do and the water-filling reduces to the one-shot
+        proportional split — the redistribution only bites for weight
+        profiles that differ from the limits, but the invariant "per-ES
+        aggregate <= cap, no strandable excess" now holds for any of them.)
+        Inactive clients keep their private rate (they do not transmit, so
+        they occupy no share).  An ideal channel or an infinite ES capacity
+        bypasses contention entirely.
         """
         cap = self.cfg.es_uplink_mbps * 1e6
         if self.cfg.model == "ideal" or not np.isfinite(cap):
@@ -152,9 +177,8 @@ class ChannelModel:
         active = np.asarray(active, bool)
         es = np.asarray(es_assign, int)
         if self.cfg.contention == "proportional":
-            weight = np.where(active, link.uplink_bps, 0.0)
-            totals = np.bincount(es, weights=weight, minlength=es.max() + 1)
-            share = cap * link.uplink_bps / np.maximum(totals[es], 1.0)
+            share = waterfill_shares(cap, link.uplink_bps, link.uplink_bps,
+                                     es, active)
         else:                                    # "equal"
             counts = np.bincount(es[active], minlength=es.max() + 1)
             share = cap / np.maximum(counts[es], 1)
@@ -173,9 +197,51 @@ class ChannelModel:
         """Per-client uplink transmit energy (P_tx * airtime), UNCAPPED.
 
         This is the full-transmission estimate; the scheduler's
-        authoritative charge is its deadline-capped ``_charge`` (which also
-        adds compute joules) — see the scheduler docstring's straggler
-        semantics."""
+        authoritative charge is its deadline-capped timeline charge (which
+        also adds compute joules) — see the scheduler docstring's timeline
+        straggler semantics."""
         with np.errstate(divide="ignore"):
             t_up = bits.uplink / link.uplink_bps
         return self.cfg.tx_power_w * np.where(np.isfinite(t_up), t_up, 0.0)
+
+
+def waterfill_shares(cap: float, weights: np.ndarray, limits: np.ndarray,
+                     groups: np.ndarray, active: np.ndarray) -> np.ndarray:
+    """Weighted proportional shares of ``cap`` per group, water-filled.
+
+    Each group's capacity ``cap`` is split among its active members in
+    proportion to ``weights``; a member whose ``limits`` (e.g. its private
+    link rate) falls below its share is CAPPED there, and the capacity it
+    cannot use re-shares among the remaining uncapped members by the same
+    weights — repeated until no new member caps (at most one new cap per
+    pass, so at most U passes; in practice the loop exits after one or
+    two).  Guarantees, per group: every active member's share <= its limit;
+    the aggregate over active members <= cap; and the aggregate equals
+    ``min(cap, sum of active limits)`` whenever weights are positive, i.e.
+    no capacity is stranded while some member could still use more.  The
+    first pass is exactly the one-shot ``cap * w / sum(w)`` split, so when
+    nothing caps the result is bit-identical to it.
+
+    Returns the (U,) share array; entries of inactive members are their
+    (uncapped, unclaimed) one-shot shares and should be ignored.
+    """
+    weights = np.asarray(weights, float)
+    limits = np.asarray(limits, float)
+    groups = np.asarray(groups, int)
+    active = np.asarray(active, bool)
+    ngroups = groups.max() + 1 if groups.size else 1
+    capped = np.zeros(weights.shape, bool)
+    share = np.full(weights.shape, cap, float)
+    for _ in range(weights.size):
+        w_unc = np.where(active & ~capped, weights, 0.0)
+        totals = np.bincount(groups, weights=w_unc, minlength=ngroups)
+        used = np.bincount(groups,
+                           weights=np.where(active & capped, limits, 0.0),
+                           minlength=ngroups)
+        remaining = np.maximum(cap - used, 0.0)
+        share = remaining[groups] * weights / np.maximum(totals[groups], 1.0)
+        newly = active & ~capped & (limits <= share)
+        if not newly.any():
+            break
+        capped |= newly
+    return np.where(active & capped, limits, share)

@@ -91,7 +91,8 @@ class CutController:
 
     def __init__(self, specs: tuple[CutSpec, ...], policy: str = "fixed", *,
                  fixed_cut: int = 0, deadline_s: float = float("inf"),
-                 tx_power_w: float = 0.5, compute_power_w: float = 0.0):
+                 tx_power_w: float = 0.5, compute_power_w: float = 0.0,
+                 pipeline: bool = False):
         if policy not in POLICIES:
             raise ValueError(f"unknown cut policy {policy!r}; one of {POLICIES}")
         if not specs:
@@ -105,9 +106,27 @@ class CutController:
         self.deadline_s = deadline_s
         self.tx_power_w = tx_power_w
         self.compute_power_w = compute_power_w
+        self.pipeline = pipeline
         self.up_bits = np.array([s.bits.uplink for s in specs], np.float64)
         self.down_bits = np.array([s.bits.downlink for s in specs], np.float64)
         self.flops = np.array([s.flops for s in specs], np.float64)
+        # minibatch decomposition of the uplink (pipelined streaming): every
+        # cell shares one chunk count (kappa0 * batches_per_epoch of the one
+        # comm table); cells without it degenerate to a single chunk, under
+        # which the pipelined estimates equal the serial ones exactly
+        if all(s.bits.up_stream is not None for s in specs):
+            self.up_stream = np.array([s.bits.up_stream for s in specs],
+                                      np.float64)
+            self.up_tail = np.array([s.bits.up_tail for s in specs],
+                                    np.float64)
+            chunkset = {int(s.bits.chunks) for s in specs}
+            assert len(chunkset) == 1, \
+                f"cells disagree on chunk count: {sorted(chunkset)}"
+            self.chunks = chunkset.pop()
+        else:
+            self.up_stream = self.up_bits
+            self.up_tail = np.zeros(len(specs))
+            self.chunks = 1
         # joint (cut, codec) grids: map each spec index back to its cut
         # position (shallow -> deep) and its codec position, so reports can
         # say WHICH split and WHICH codec a client got, not just the cell
@@ -127,10 +146,13 @@ class CutController:
         return len(self.codec_names) > 1
 
     def bits_for(self, cuts: np.ndarray) -> RoundBits:
-        """Per-client (uplink, downlink) bit arrays for a cut-index vector."""
+        """Per-client (uplink, downlink) bit arrays for a cut-index vector,
+        carrying the minibatch decomposition the pipelined timeline needs."""
         cuts = np.asarray(cuts, int)
         return RoundBits(uplink=self.up_bits[cuts],
-                         downlink=self.down_bits[cuts])
+                         downlink=self.down_bits[cuts],
+                         up_stream=self.up_stream[cuts],
+                         up_tail=self.up_tail[cuts], chunks=self.chunks)
 
     def flops_for(self, cuts: np.ndarray) -> np.ndarray:
         """Per-client client-side FLOPs for a cut-index vector."""
@@ -145,17 +167,40 @@ class CutController:
         cut ships fewer activation bits but burns more client FLOPs, and
         only with both terms does the controller see the full ASFL
         trade-off.  ``None`` (or all-zero, i.e. infinite compute) reproduces
-        the bits-only estimates exactly."""
+        the bits-only estimates exactly.
+
+        With ``pipeline=True`` the TIME estimate prices the overlapped
+        streaming timeline instead of the serial sum: per-chunk compute
+        ``c = t_comp / chunks`` and per-payload airtime ``u`` close to an
+        uplink finish of ``c + u + (chunks-1)*max(c, u) + tail`` (see
+        ``repro.wireless.timeline``), which shifts every greedy/deadline
+        (cut, codec) trade-off — a compute-heavy deep cut hides its FLOPs
+        behind the radio.  The ENERGY estimate is unchanged: overlap moves
+        segments earlier but the total compute and airtime (and therefore
+        the joules) are identical."""
         with np.errstate(divide="ignore", invalid="ignore"):
             t_up = self.up_bits[:, None] / up_bps[None, :]
             t_down = self.down_bits[:, None] / down_bps[None, :]
         t_up = np.nan_to_num(t_up, nan=0.0)        # inf rate: 0 airtime
         t_down = np.nan_to_num(t_down, nan=0.0)
-        times = 2 * np.asarray(latency_s)[None, :] + t_up + t_down
-        energy = self.tx_power_w * t_up
+        t_comp = 0.0
         if sec_per_flop is not None:
             t_comp = self.flops[:, None] * np.asarray(sec_per_flop)[None, :]
-            times = times + t_comp
+        if self.pipeline:
+            with np.errstate(divide="ignore", invalid="ignore"):
+                u = self.up_stream[:, None] / up_bps[None, :]
+                t_tail = self.up_tail[:, None] / up_bps[None, :]
+            u = np.nan_to_num(u, nan=0.0)
+            t_tail = np.nan_to_num(t_tail, nan=0.0)
+            c = t_comp / self.chunks
+            up_finish = c + u + (self.chunks - 1) * np.maximum(c, u) + t_tail
+            times = 2 * np.asarray(latency_s)[None, :] + up_finish + t_down
+        else:
+            times = 2 * np.asarray(latency_s)[None, :] + t_up + t_down
+            if sec_per_flop is not None:
+                times = times + t_comp
+        energy = self.tx_power_w * t_up
+        if sec_per_flop is not None:
             energy = energy + self.compute_power_w * t_comp
         return times, energy
 
@@ -205,7 +250,8 @@ def make_cut_controller(comms: dict, kappa0: int, *, policy: str = "fixed",
                         deadline_s: float = float("inf"),
                         tx_power_w: float = 0.5,
                         compute_power_w: float = 0.0,
-                        codec_cycles_per_element: float = 0.0) -> CutController:
+                        codec_cycles_per_element: float = 0.0,
+                        pipeline: bool = False) -> CutController:
     """Convenience: per-cut CommModel table -> controller.
 
     ``fixed_cut`` may be a candidate NAME (e.g. ``"conv1"``, an LM depth, or
@@ -225,4 +271,4 @@ def make_cut_controller(comms: dict, kappa0: int, *, policy: str = "fixed",
         raise ValueError(f"fixed_cut {fixed_cut!r} not among {cells}")
     return CutController(specs, policy, fixed_cut=fixed_cut,
                          deadline_s=deadline_s, tx_power_w=tx_power_w,
-                         compute_power_w=compute_power_w)
+                         compute_power_w=compute_power_w, pipeline=pipeline)

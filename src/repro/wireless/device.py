@@ -97,6 +97,15 @@ class DeviceModel:
         """Per-client seconds to burn ``flops`` (scalar or (U,))."""
         return np.asarray(flops, float) * self.sec_per_flop
 
+    def chunk_time_s(self, flops, chunks: int) -> np.ndarray:
+        """Per-client seconds of ONE minibatch chunk of a round's workload.
+
+        The pipelined timeline (``repro.wireless.timeline``) models the
+        round's ``kappa0 * batches_per_epoch`` minibatches as EQUAL compute
+        chunks — the client block runs the same forward+backward on every
+        same-sized minibatch, so the split is uniform by construction."""
+        return self.compute_time_s(flops) / max(int(chunks), 1)
+
     def compute_energy_j(self, compute_s) -> np.ndarray:
         """Joules drawn while computing for ``compute_s`` seconds."""
         return self.cfg.compute_power_w * np.asarray(compute_s, float)

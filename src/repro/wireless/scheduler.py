@@ -8,15 +8,15 @@ participation mask per edge round:
    recharge; under a fading channel a client priced out of a deep-fade
    round may still afford a later cheap one).  The gate compares the budget
    against the DEADLINE-CAPPED charge the client would actually pay (see
-   "straggler semantics" below) — gating on the uncapped full airtime would
-   silently bar a client that can afford the capped charge while a richer
-   client is scheduled and burns exactly that capped amount;
+   "timeline straggler semantics" below) — gating on the uncapped full
+   airtime would silently bar a client that can afford the capped charge
+   while a richer client is scheduled and burns exactly that capped amount;
 2. **selection** — an optional scheduling cap: ``topk`` keeps the k
    fastest affordable clients (rate-aware scheduling), ``random`` thins
    them i.i.d. with ``participation_prob`` (unbiased client sampling);
 3. **deadline** — a scheduled client completes only if its simulated round
-   time (channel latency + uplink + downlink airtime for this round's
-   traffic) is within ``deadline_s`` (straggler dropout).
+   time (channel latency + its timeline's uplink/downlink/compute activity)
+   is within ``deadline_s`` (straggler dropout).
 
 Two optional refinements sit between gates 2 and 3:
 
@@ -24,61 +24,93 @@ Two optional refinements sit between gates 2 and 3:
   CutController` picks a per-client cut each round, making the traffic
   (and therefore times, energies, and the deadline outcome) cut-indexed;
 - **per-ES contention** (``es_uplink_mbps`` finite): the scheduled clients
-  of one ES split its uplink capacity (evenly, or rate-proportionally under
-  ``contention="proportional"``), so times/energies are recomputed at the
-  contended rates, adaptive cut policies re-decide, and clients the
-  contended price makes unaffordable withdraw (they never transmit, cost
-  nothing, and make nobody wait).  With ``reshare_uplink=True`` (default) a
-  SECOND contention pass then re-shares the capacity the withdrawn clients
-  freed among the survivors — survivor rates can only rise (fewer clients
-  split the same pipe), so no further withdrawals are possible and one
-  extra pass suffices; the survivors keep the cuts they chose at the
-  first-pass rates (the freed capacity only speeds them up).
-  ``reshare_uplink=False`` reproduces the conservative single pass.
+  of one ES split its uplink capacity (evenly, or rate-proportionally with
+  water-filling under ``contention="proportional"``), so times/energies are
+  recomputed at the contended rates, adaptive cut policies re-decide, and
+  clients the contended price makes unaffordable withdraw (they never
+  transmit, cost nothing, and make nobody wait).  With
+  ``reshare_uplink=True`` (default) a SECOND contention pass then re-shares
+  the capacity the withdrawn clients freed among the survivors — survivor
+  rates can only rise (fewer clients split the same pipe), so no further
+  withdrawals are possible and one extra pass suffices; the survivors keep
+  the cuts they chose at the first-pass rates (the freed capacity only
+  speeds them up).  ``reshare_uplink=False`` reproduces the conservative
+  single pass.  Under ``selection="topk"``, a withdrawal no longer silently
+  shrinks the round below k: a single BACKFILL pass promotes the
+  next-fastest affordable clients (by their pre-contention private times)
+  into the freed slots and re-runs the contention round on the refilled
+  set — any client the refilled price makes unaffordable (backfilled or
+  original) withdraws, and the pass does not iterate further, so the
+  round is bounded at two contention rounds and can still end under k if
+  the refilled prices bite.
 
-A per-client **device model** (``repro.wireless.device``) adds client-side
-COMPUTE to every decision: the round time is compute + channel time, the
-energy charge is compute joules + transmit joules, and adaptive cut
-policies price each candidate's FLOPs next to its bits — so a deep cut's
-smaller activation tensor no longer looks free on a compute-starved
-client.  ``compute_gflops=inf`` (the default) zeroes every compute term:
-the pre-device scheduler bit-for-bit, EXCEPT where the straggler-semantics
-bugfixes below intentionally changed the accounting (the deadline-capped
-energy gate and the moved-bits ledger differ from the old code whenever
-``deadline_s`` is finite; the golden regression pins the inf-deadline
-scenarios where no fix applies).
+Timeline event model (``repro.wireless.timeline``): every per-client
+quantity — completion time, deadline-capped charge, moved bits — is read
+off ONE explicit per-client event timeline of compute segments, uplink
+segments, and the downlink segment, so the gate, the deduction, and the
+ledger can never disagree.  Two timeline shapes exist:
 
-Straggler semantics (the single source of truth for gate, charge, and
-traffic accounting): a scheduled client first COMPUTES (kappa0 local
-epochs of client-block work at ``compute_power_w``), then TRANSMITS (at
-``tx_power_w``) until it finishes or the deadline cuts it off.  Its
-deadline-capped activity is therefore
+- **serial** (``WirelessConfig.pipeline=False``, default): compute first
+  (kappa0 local epochs), then transmit, then receive — the paper's Eq.-17
+  model, bit-for-bit identical to the pre-timeline scheduler;
+- **pipelined** (``pipeline=True``): the kappa0 x batches_per_epoch
+  minibatch activations STREAM — each payload transmits as soon as its
+  minibatch's compute finishes and the radio is free, so the uplink
+  finishes at ``c + u + (n-1)*max(c, u) + tail`` instead of ``n*c + n*u +
+  tail`` (per-chunk compute c, per-payload airtime u): pipelining saves
+  exactly ``(n-1)*min(c, u) >= 0`` and the round time moves from
+  ``compute + tx`` toward ``max(compute, tx)`` plus one fill bubble.
 
-    compute_s = min(full compute time, deadline)
-    tx_s      = min(uplink airtime, max(deadline - compute time, 0))
+Timeline straggler semantics (the single source of truth for gate, charge,
+and traffic accounting): activity segments are LATENCY-FREE — latency is
+charged on the round CLOCK (``times_s``), not against the transmit window,
+so the capped window slightly over-credits a straggler whose deadline
+slack is mostly propagation delay.  A deadline at ``T`` freezes the
+timeline at ``T``: each segment is charged its overlap with ``[0, T)``, so
 
-(deliberately latency-free, like the pre-device straggler charge and the
-Eq.-17 traffic terms: latency is charged on the round CLOCK, not against
-the transmit window, so the capped window slightly over-credits a
-straggler whose deadline slack is mostly propagation delay)
+    compute_charged_s = min(total compute, T)
+    tx_charged_s      = sum over uplink segments of their overlap with T
+    down_window_s     = overlap of the downlink segment with T
 
-and the energy charge is ``compute_power_w * compute_s + tx_power_w *
-tx_s`` — paid by EVERY scheduled client, deadline-missing stragglers
-included (their update is discarded but the joules are spent).  The energy
-gate admits exactly the clients whose budget covers this charge, so the
-gate and the deduction can never disagree and budgets never go negative.
-A client whose compute alone consumes the whole deadline window (tx window
-zero) is never scheduled at all: it could not push a single bit before the
-cutoff, so scheduling it would only burn a contention share and pin the
-round clock at the deadline.
-``RoundReport.bits_tx`` counts the bits that actually MOVED: a straggler
-moved only ``uplink_bps * tx_s`` uplink bits and never received its
-downlink, so it contributes that, not its full offered up+down traffic.
+(serial: ``tx_charged_s = min(uplink airtime, max(T - compute, 0))``
+exactly as before; pipelined: the per-segment sum credits the airtime
+actually spent under the overlapped schedule) and the energy charge is
+``compute_power_w * compute_charged_s + tx_power_w * tx_charged_s`` — paid
+by EVERY scheduled client, deadline-missing stragglers included (their
+update is discarded, unless staleness banking folds it in late — below).
+The energy gate admits exactly the clients whose budget covers this
+charge, so the gate and the deduction can never disagree and budgets never
+go negative.  A client that could not push a single uplink bit before the
+cutoff (serial: compute alone eats the window; pipelined: even the FIRST
+chunk's compute does) is never scheduled at all: scheduling it would only
+burn a contention share and pin the round clock at the deadline.
+``RoundReport.bits_tx`` counts the bits that actually MOVED, both ways: a
+straggler counts ``uplink_bps * tx_charged_s`` uplink bits plus
+``downlink_bps * down_window_s`` downlink bits (a client cut mid-downlink
+is credited the partial broadcast it did receive — the downlink twin of
+the pro-rated uplink credit).
+
+Staleness banking (``WirelessConfig.staleness_lambda > 0``): a deadline-cut
+straggler's undelivered uplink remainder is BANKED (``uplink bits -
+moved uplink bits``) instead of discarded.  In each later round the banked
+client is idle (unscheduled), its radio background-pushes the remainder at
+its PRIVATE rate inside that round's wall-clock window, energy-gated and
+energy-charged like any transmission; when the remainder reaches zero the
+update is DELIVERED at staleness ``s`` = the number of edge rounds since
+it was banked (``RoundReport.stale_delivered[u] = s``, always >= 1), and
+``repro.core.fedsim`` folds the banked model into that round's edge
+aggregation with weight ``alpha_u * lambda**s``.  A bank dies without
+delivering when its client completes a FRESH round (the fresh update
+supersedes it) or straggles again (the new remainder replaces it) —
+``RoundReport.stale_dropped``.  ``staleness_lambda=0`` (default) disables
+the machinery entirely and reproduces the hard-dropout scheduler
+bit-for-bit.
 
 The simulated edge-round wall clock is the slowest scheduled client's time
 when every scheduled client made the deadline, else the full deadline (the
 ES waits it out).  Clients the scheduler never scheduled (energy, top-k,
-thinning) cost no waiting.
+thinning) cost no waiting, and background stale pushes ride inside the
+existing window.
 """
 
 from __future__ import annotations
@@ -90,6 +122,7 @@ import numpy as np
 from repro.configs.base import WirelessConfig
 from repro.wireless.channel import ChannelModel, LinkState, RoundBits
 from repro.wireless.device import DeviceModel
+from repro.wireless.timeline import RoundTimeline, build_timeline
 
 
 @dataclass
@@ -109,13 +142,23 @@ class RoundReport:
     #                                cut x codec grid is in play)
     bits_tx: float = 0.0           # total bits actually MOVED this round by
     #                                scheduled clients (a deadline-cut
-    #                                straggler counts only the uplink bits
-    #                                it pushed before the cutoff, and no
-    #                                downlink)
+    #                                straggler counts the uplink bits it
+    #                                pushed and the downlink bits it received
+    #                                before the cutoff) plus background
+    #                                stale-bank pushes
     compute_s: np.ndarray = None   # (U,) per-client local compute time of
     #                                this round's workload (device model)
     compute_j: np.ndarray = None   # (U,) compute joules actually charged
     #                                (zero for unscheduled clients)
+    stale_banked: np.ndarray = None     # (U,) bool: this round's straggler
+    #                                remainder was banked for late delivery
+    #                                (None unless staleness_lambda > 0)
+    stale_delivered: np.ndarray = None  # (U,) int: a banked update finished
+    #                                arriving this round, value = staleness
+    #                                in edge rounds (0 = nothing delivered)
+    stale_dropped: np.ndarray = None    # (U,) bool: a bank died unfolded
+    #                                (superseded by a fresh round or
+    #                                replaced by a newer straggle)
 
     @property
     def num_participants(self) -> int:
@@ -144,6 +187,9 @@ class ParticipationScheduler:
             raise ValueError(f"unknown selection policy {cfg.selection!r}")
         if (bits is None) == (cutter is None):
             raise ValueError("pass exactly one of bits= or cutter=")
+        if not 0.0 <= cfg.staleness_lambda <= 1.0:
+            raise ValueError(f"staleness_lambda must be in [0, 1], got "
+                             f"{cfg.staleness_lambda}")
         self.cfg = cfg
         self.channel = channel
         self.bits = bits
@@ -160,6 +206,10 @@ class ParticipationScheduler:
         assert self.es_assign.shape == (self.U,)
         self.energy_left = np.full(self.U, cfg.energy_budget_j)
         self._rng = np.random.default_rng(cfg.seed + 1)
+        # staleness banking state: the undelivered uplink remainder of each
+        # client's last straggle, and its age in edge rounds (-1 = no bank)
+        self._stale_pending = np.zeros(self.U)
+        self._stale_age = np.full(self.U, -1)
 
     def _bits_cuts(self, up_bps, down_bps, latency_s):
         """Cut decision (or the fixed bits) at the given rates."""
@@ -175,42 +225,78 @@ class ParticipationScheduler:
         flops = self.flops if cuts is None else self.cutter.flops_for(cuts)
         return np.broadcast_to(self.device.compute_time_s(flops), (self.U,))
 
-    def _charge(self, link: LinkState, bits: RoundBits, comp_s: np.ndarray):
-        """Deadline-capped (charge, tx_s, comp_charged_s, can_tx) per client.
+    def _timeline(self, link: LinkState, bits: RoundBits,
+                  comp_s: np.ndarray) -> RoundTimeline:
+        """The round's per-client event timeline at the given rates — the
+        single source of truth for times, charges, and moved bits (module
+        docstring's timeline straggler semantics)."""
+        return build_timeline(link, bits, comp_s, self.cfg.deadline_s,
+                              self.U, pipeline=self.cfg.pipeline)
 
-        The straggler semantics of the module docstring: compute first,
-        transmit until done or cut off, pay for both.  This one quantity
-        drives the energy GATE, the energy DEDUCTION, and the moved-bits
-        accounting, so they can never disagree.  ``can_tx`` is False for a
-        client whose compute alone consumes the whole deadline window — it
-        could not push a single bit before the cutoff, so scheduling it
-        would only burn a contention share and pin the round clock (at
-        ``compute_power_w=0`` its charge is 0, so without this flag the
-        energy gate would schedule it forever).
+    def _contend(self, private: LinkState, scheduled: np.ndarray, bits, cuts,
+                 comp_s, tl: RoundTimeline):
+        """One full contention round over the ``scheduled`` set.
+
+        Shares the per-ES pipe, lets adaptive cut policies re-decide at the
+        contended rates, withdraws clients the contended price makes
+        unaffordable, and (``reshare_uplink``) re-shares their freed
+        capacity among the survivors.  Returns the (possibly shrunk)
+        scheduled set plus everything priced at the final rates; a bypassed
+        contention (ideal channel / infinite capacity) returns the inputs
+        untouched with ``contended=False``.
         """
         cfg = self.cfg
-        with np.errstate(divide="ignore"):
-            t_up = np.asarray(bits.uplink, float) / link.uplink_bps
-        t_up = np.where(np.isfinite(t_up), t_up, 0.0)
-        c_s = np.minimum(comp_s, cfg.deadline_s)
-        window = np.maximum(cfg.deadline_s - comp_s, 0.0)
-        tx_s = np.minimum(t_up, window)
-        charge = cfg.tx_power_w * tx_s + cfg.compute_power_w * c_s
-        return charge, tx_s, c_s, window > 0
+        link = private
+        eff_up = self.channel.contended_uplink(private, scheduled,
+                                               self.es_assign)
+        if eff_up is private.uplink_bps:
+            return (link, bits, cuts, comp_s, tl, scheduled,
+                    np.zeros(self.U, bool), False)
+        link = LinkState(eff_up, private.downlink_bps, private.latency_s)
+        if self.cutter is not None and self.cutter.policy != "fixed":
+            # adaptive policies re-decide at the rate actually available
+            bits2, cuts2 = self._bits_cuts(eff_up, link.downlink_bps,
+                                           link.latency_s)
+            cuts = np.where(scheduled, cuts2, cuts)
+            bits = self.cutter.bits_for(cuts)
+            comp_s = self._compute_s(cuts)
+        tl = self._timeline(link, bits, comp_s)
+        charge = tl.charge_j(cfg.tx_power_w, cfg.compute_power_w)
+        # the contended price can only be higher; a client that can no
+        # longer afford it (or whose re-decided cut left it no transmit
+        # window) withdraws before transmitting
+        ok = (self.energy_left >= charge) & tl.can_tx
+        withdrawn = scheduled & ~ok
+        scheduled = scheduled & ok
+        if cfg.reshare_uplink and withdrawn.any() and scheduled.any():
+            # second pass: survivors absorb the capacity the withdrawn
+            # clients freed.  Rates can only rise (fewer clients share
+            # the same pipe), so times/energies only fall and no new
+            # withdrawal is possible; the survivors keep their
+            # first-pass cut/codec choices.
+            eff_up = self.channel.contended_uplink(private, scheduled,
+                                                   self.es_assign)
+            link = LinkState(eff_up, private.downlink_bps,
+                             private.latency_s)
+            tl = self._timeline(link, bits, comp_s)
+        return link, bits, cuts, comp_s, tl, scheduled, withdrawn, True
 
     def step(self, round_idx: int) -> RoundReport:
         cfg = self.cfg
         link = self.channel.sample(round_idx)
+        private = link
         bits, cuts = self._bits_cuts(link.uplink_bps, link.downlink_bps,
                                      link.latency_s)
         comp_s = self._compute_s(cuts)
-        times = self.channel.round_time_s(link, bits) + comp_s
-        charge, tx_s, c_s, can_tx = self._charge(link, bits, comp_s)
+        tl = self._timeline(link, bits, comp_s)
+        charge = tl.charge_j(cfg.tx_power_w, cfg.compute_power_w)
+        times0 = tl.times_s                     # private-rate times (topk)
 
         # gate 1: energy (deadline-capped charge) + a transmit window at all
-        scheduled = (self.energy_left >= charge) & can_tx
+        gate1 = (self.energy_left >= charge) & tl.can_tx
+        scheduled = gate1.copy()
         if cfg.selection == "topk" and cfg.topk > 0:     # gate 2a: k fastest
-            order = np.argsort(np.where(scheduled, times, np.inf))
+            order = np.argsort(np.where(scheduled, times0, np.inf))
             keep = np.zeros(self.U, bool)
             keep[order[:cfg.topk]] = True
             scheduled &= keep
@@ -218,38 +304,27 @@ class ParticipationScheduler:
             scheduled &= self._rng.random(self.U) < cfg.participation_prob
 
         # ---- per-ES uplink contention among the scheduled clients ----
-        private = link
-        eff_up = self.channel.contended_uplink(link, scheduled,
-                                               self.es_assign)
-        if eff_up is not link.uplink_bps:
-            link = LinkState(eff_up, link.downlink_bps, link.latency_s)
-            if self.cutter is not None and self.cutter.policy != "fixed":
-                # adaptive policies re-decide at the rate actually available
-                bits2, cuts2 = self._bits_cuts(eff_up, link.downlink_bps,
-                                               link.latency_s)
-                cuts = np.where(scheduled, cuts2, cuts)
-                bits = self.cutter.bits_for(cuts)
-                comp_s = self._compute_s(cuts)
-            times = self.channel.round_time_s(link, bits) + comp_s
-            charge, tx_s, c_s, can_tx = self._charge(link, bits, comp_s)
-            # the contended price can only be higher; a client that can no
-            # longer afford it (or whose re-decided cut left it no transmit
-            # window) withdraws before transmitting
-            withdrawn = scheduled & ~((self.energy_left >= charge) & can_tx)
-            scheduled &= (self.energy_left >= charge) & can_tx
-            if (self.cfg.reshare_uplink and withdrawn.any()
-                    and scheduled.any()):
-                # second pass: survivors absorb the capacity the withdrawn
-                # clients freed.  Rates can only rise (fewer clients share
-                # the same pipe), so times/energies only fall and no new
-                # withdrawal is possible; the survivors keep their
-                # first-pass cut/codec choices.
-                eff_up = self.channel.contended_uplink(private, scheduled,
-                                                       self.es_assign)
-                link = LinkState(eff_up, private.downlink_bps,
-                                 private.latency_s)
-                times = self.channel.round_time_s(link, bits) + comp_s
-                charge, tx_s, c_s, _ = self._charge(link, bits, comp_s)
+        bits0, cuts0, comp0, tl0 = bits, cuts, comp_s, tl
+        (link, bits, cuts, comp_s, tl, scheduled, withdrawn,
+         contended) = self._contend(private, scheduled, bits, cuts, comp_s,
+                                    tl)
+        if (contended and cfg.selection == "topk" and cfg.topk > 0
+                and int(scheduled.sum()) < cfg.topk):
+            # topk BACKFILL (single pass, see module docstring): promote the
+            # next-fastest affordable never-withdrawn clients into the freed
+            # slots and re-run the contention round on the refilled set
+            pool = gate1 & ~scheduled & ~withdrawn
+            if pool.any():
+                order = np.argsort(np.where(pool, times0, np.inf))
+                extra = np.zeros(self.U, bool)
+                extra[order[:cfg.topk - int(scheduled.sum())]] = True
+                extra &= pool
+                if extra.any():
+                    (link, bits, cuts, comp_s, tl, scheduled, withdrawn,
+                     _) = self._contend(private, scheduled | extra, bits0,
+                                        cuts0, comp0, tl0)
+        times = tl.times_s
+        charge = tl.charge_j(cfg.tx_power_w, cfg.compute_power_w)
 
         alive = scheduled & (times <= cfg.deadline_s)    # gate 3: deadline
 
@@ -271,9 +346,10 @@ class ParticipationScheduler:
             round_time = float(t) if np.isfinite(t) else 0.0
         # translate internal candidate-cell indices into cut depth / codec
         # positions so the report reads "which split, which codec", and sum
-        # the bits that actually MOVED: a completing client moved its full
-        # up+down traffic, a deadline-cut straggler only the uplink bits it
-        # pushed before the cutoff (uplink_bps * tx_s) and no downlink
+        # the bits that actually MOVED off the timeline: a completing client
+        # moved its full up+down traffic, a deadline-cut straggler the
+        # uplink bits it pushed (uplink_bps * tx_charged_s) and the downlink
+        # bits it received (downlink_bps * down_window_s) before the cutoff
         rep_cuts = rep_codecs = None
         if cuts is not None:
             rep_cuts = self.cutter.cut_pos[cuts]
@@ -283,12 +359,28 @@ class ParticipationScheduler:
         down = np.broadcast_to(np.asarray(bits.downlink, float), (self.U,))
         up_rate = np.broadcast_to(np.asarray(link.uplink_bps, float),
                                   (self.U,))
+        down_rate = np.broadcast_to(np.asarray(link.downlink_bps, float),
+                                    (self.U,))
+        tx_s, down_win = tl.tx_charged_s, tl.down_window_s
         with np.errstate(invalid="ignore"):      # ideal channel: inf * 0
             moved_up = np.where(alive, up,
                                 np.where(tx_s > 0, up_rate * tx_s, 0.0))
-        moved = moved_up + np.where(alive, down, 0.0)
+            moved_down = np.where(alive, down,
+                                  np.where(down_win > 0,
+                                           down_rate * down_win, 0.0))
+        moved = moved_up + moved_down
         bits_tx = float(moved[scheduled].sum())
-        compute_j = np.where(scheduled, cfg.compute_power_w * c_s, 0.0)
+
+        # ---- staleness banking (module docstring; lambda=0: no machinery)
+        stale_banked = stale_delivered = stale_dropped = None
+        if cfg.staleness_lambda > 0.0:
+            stale_banked, stale_delivered, stale_dropped, bg_bits = \
+                self._stale_update(private, scheduled, alive, up, moved_up,
+                                   round_time)
+            bits_tx += bg_bits
+
+        compute_j = np.where(scheduled,
+                             cfg.compute_power_w * tl.compute_charged_s, 0.0)
         return RoundReport(round_idx=round_idx, mask=alive.astype(np.float64),
                            times_s=times, round_time_s=round_time,
                            energy_left_j=self.energy_left.copy(),
@@ -296,4 +388,67 @@ class ParticipationScheduler:
                            uplink_bps=np.asarray(link.uplink_bps).copy(),
                            codecs=rep_codecs, bits_tx=bits_tx,
                            compute_s=np.asarray(comp_s, float).copy(),
-                           compute_j=compute_j)
+                           compute_j=compute_j, stale_banked=stale_banked,
+                           stale_delivered=stale_delivered,
+                           stale_dropped=stale_dropped)
+
+    def _stale_update(self, private: LinkState, scheduled, alive, up,
+                      moved_up, round_time: float):
+        """One round of the staleness bank's state machine.
+
+        Ages every bank; background-pushes idle banks' remainders at the
+        clients' PRIVATE rates inside this round's wall-clock window
+        (energy-gated and charged like any transmission); marks banks
+        DELIVERED when the remainder reaches zero; drops banks a fresh
+        completion supersedes; banks this round's new straggler remainders
+        (replacing any older bank).  Returns the three (U,) report arrays
+        plus the background bits moved.
+        """
+        cfg, U = self.cfg, self.U
+        stale_banked = np.zeros(U, bool)
+        stale_delivered = np.zeros(U, int)
+        stale_dropped = np.zeros(U, bool)
+        bg_bits = 0.0
+        has_bank = self._stale_age >= 0
+        if has_bank.any():
+            self._stale_age = np.where(has_bank, self._stale_age + 1,
+                                       self._stale_age)
+            superseded = has_bank & alive    # a fresh update landed instead
+            idle = has_bank & ~scheduled     # radio free: background push
+            rate = np.broadcast_to(np.asarray(private.uplink_bps, float),
+                                   (U,))
+            with np.errstate(divide="ignore", invalid="ignore"):
+                need = self._stale_pending / rate
+            need = np.where(np.isfinite(need), need, 0.0)
+            afford = (self.energy_left / cfg.tx_power_w
+                      if cfg.tx_power_w > 0 else np.full(U, np.inf))
+            air = np.minimum(np.minimum(need, round_time), afford)
+            air = np.where(idle, np.maximum(air, 0.0), 0.0)
+            with np.errstate(invalid="ignore"):  # ideal channel: inf * 0
+                moved_bg = np.where(air >= need, self._stale_pending,
+                                    np.where(air > 0, rate * air, 0.0))
+            moved_bg = np.where(idle, moved_bg, 0.0)
+            # air <= budget/power by construction; the maximum() only mops
+            # up the one-ulp rounding of power * (budget / power)
+            self.energy_left = np.where(
+                air > 0,
+                np.maximum(self.energy_left - cfg.tx_power_w * air, 0.0),
+                self.energy_left)
+            self._stale_pending = self._stale_pending - moved_bg
+            bg_bits = float(moved_bg.sum())
+            delivered = idle & (self._stale_pending <= 0.0)
+            stale_delivered = np.where(delivered, self._stale_age, 0)
+            stale_dropped |= superseded
+            clear = delivered | superseded
+            self._stale_age = np.where(clear, -1, self._stale_age)
+            self._stale_pending = np.where(clear, 0.0, self._stale_pending)
+        strag = scheduled & ~alive
+        if strag.any():
+            # a newer straggle replaces any surviving older bank
+            stale_dropped |= strag & (self._stale_age >= 0)
+            remainder = np.maximum(up - moved_up, 0.0)
+            self._stale_pending = np.where(strag, remainder,
+                                           self._stale_pending)
+            self._stale_age = np.where(strag, 0, self._stale_age)
+            stale_banked |= strag
+        return stale_banked, stale_delivered, stale_dropped, bg_bits

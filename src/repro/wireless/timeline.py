@@ -1,0 +1,199 @@
+"""Per-client event timelines for one edge round (serial and pipelined).
+
+This module is the scheduler's event model: instead of one scalar per
+client ("round time = 2*latency + uplink airtime + downlink airtime +
+compute"), each client's round is an explicit sequence of SEGMENTS —
+compute chunks, uplink transmissions, and the downlink reception — each
+with a start, an end, a bit count, and the joules burned while it runs.
+Every scheduler quantity (the deadline gate, the energy charge, the
+moved-bits ledger, the round clock) is derived from the same timeline, so
+they can never disagree.
+
+Two builders share one dataclass:
+
+- **serial** (``pipeline=False``): the paper's Eq.-17 model.  One compute
+  segment (kappa0 local epochs), then one uplink segment (the whole round's
+  uplink traffic), then the downlink.  The aggregate arithmetic is kept in
+  the exact historical expression order, so the serial timeline reproduces
+  the pre-timeline scheduler bit-for-bit (the golden regression pins it).
+- **pipelined** (``pipeline=True``): minibatch-granular streaming
+  (Accelerating SFL, Xu et al.).  The compute splits into ``bits.chunks``
+  equal chunks (one per minibatch of the kappa0 local epochs); chunk ``i``'s
+  activation payload (``bits.up_stream`` bits) is eligible to transmit as
+  soon as chunk ``i``'s compute finishes AND the radio finished payload
+  ``i-1``.  With per-chunk compute ``c = compute_s / n`` and per-payload
+  airtime ``u = up_stream / rate`` the recurrence closes to
+
+        tx_start[i] = max((i+1) * c, c + i * u)
+        tx_end[i]   = tx_start[i] + u
+
+    (induction: the radio is busy ``u`` per payload once it starts, and can
+    never start before the payload exists), so the uplink finishes at
+
+        c + u + (n - 1) * max(c, u) + tail_airtime
+
+    — ``max(compute, tx)`` per steady-state slot plus one fill bubble of
+    ``min(c, u)``, plus the client-block offload tail (``bits.up_tail``,
+    ready only after the last minibatch).  The serial uplink finish is
+    ``n*c + n*u + tail``, so pipelining saves exactly ``(n-1) * min(c, u)``
+    >= 0: the pipelined completion time is NEVER worse, and degenerates to
+    the serial one when ``n == 1``, when compute is free (``c == 0``), or
+    when the decomposition is absent.
+
+Deadline semantics (both builders): activity segments are LATENCY-FREE,
+exactly like the pre-timeline straggler charge — latency is charged on the
+round CLOCK (``times_s``), not against the transmit window.  A deadline at
+``T`` freezes every segment at ``T``: ``compute_charged_s`` /
+``tx_charged_s`` / ``down_window_s`` are the per-segment overlaps with
+``[0, T]``, and the moved-bits ledger prices ``rate * overlap``.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.wireless.channel import LinkState, RoundBits
+
+
+@dataclass
+class RoundTimeline:
+    """Explicit per-client activity timeline of one edge round.
+
+    All segment clocks are LATENCY-FREE activity time (t=0 is when the
+    client starts computing); ``times_s`` is the only field on the round
+    clock (it adds the 2*latency propagation term).  Segment arrays are
+    ``(U, n)`` with ``n`` segments per client; scalars broadcast.
+    """
+    pipelined: bool
+    # compute segments: chunk i runs over [comp_start[:, i], comp_end[:, i])
+    comp_start: np.ndarray     # (U, n)
+    comp_end: np.ndarray       # (U, n)
+    # uplink segments: payload i transmits over [tx_start[:, i], tx_end[:, i])
+    tx_start: np.ndarray       # (U, m)  (m = n + 1 with an offload tail)
+    tx_end: np.ndarray         # (U, m)
+    tx_bits: np.ndarray        # (U, m) bits of each uplink payload
+    # downlink segment (starts when the uplink finishes, latency-free)
+    down_start: np.ndarray     # (U,)
+    down_end: np.ndarray       # (U,)
+    # authoritative aggregates (the scheduler's decision quantities)
+    times_s: np.ndarray        # (U,) round-clock completion (2*latency + act)
+    compute_s: np.ndarray      # (U,) total compute time (uncapped)
+    compute_charged_s: np.ndarray  # (U,) compute seconds within the deadline
+    tx_charged_s: np.ndarray   # (U,) uplink seconds within the deadline
+    down_window_s: np.ndarray  # (U,) downlink seconds within the deadline
+    can_tx: np.ndarray         # (U,) bool: >= 1 uplink bit movable in window
+
+    def charge_j(self, tx_power_w: float, compute_power_w: float):
+        """Deadline-capped joules: what a scheduled client actually pays."""
+        return (tx_power_w * self.tx_charged_s
+                + compute_power_w * self.compute_charged_s)
+
+    def segments(self, u: int) -> list[dict]:
+        """Client ``u``'s timeline as readable rows (for reports/examples)."""
+        rows = []
+        for i in range(self.comp_start.shape[1]):
+            rows.append({"kind": "compute", "start": float(self.comp_start[u, i]),
+                         "end": float(self.comp_end[u, i])})
+        for i in range(self.tx_start.shape[1]):
+            if self.tx_bits[u, i] > 0 or self.tx_start.shape[1] == 1:
+                rows.append({"kind": "uplink", "start": float(self.tx_start[u, i]),
+                             "end": float(self.tx_end[u, i]),
+                             "bits": float(self.tx_bits[u, i])})
+        rows.append({"kind": "downlink", "start": float(self.down_start[u]),
+                     "end": float(self.down_end[u])})
+        return sorted(rows, key=lambda r: (r["start"], r["end"]))
+
+
+def _overlap(start, length, deadline):
+    """Per-segment overlap of [start, start+length) with [0, deadline)."""
+    return np.clip(deadline - start, 0.0, length)
+
+
+def build_timeline(link: LinkState, bits: RoundBits, comp_s: np.ndarray,
+                   deadline_s: float, U: int, *,
+                   pipeline: bool = False) -> RoundTimeline:
+    """Build one round's per-client timeline at the given link rates.
+
+    ``pipeline=False`` keeps the serial aggregates in the exact historical
+    expression order (2*latency + t_up + t_down + compute; the capped
+    window ``min(airtime, max(deadline - compute, 0))``) so the serial path
+    is bit-identical to the pre-timeline scheduler.
+    """
+    if pipeline:
+        return _pipelined(link, bits, comp_s, deadline_s, U)
+    return _serial(link, bits, comp_s, deadline_s, U)
+
+
+def _serial(link, bits, comp_s, deadline_s, U):
+    comp_s = np.broadcast_to(np.asarray(comp_s, float), (U,))
+    with np.errstate(divide="ignore"):
+        t_up_clock = bits.uplink / link.uplink_bps
+        t_down = bits.downlink / link.downlink_bps
+        t_up = np.asarray(bits.uplink, float) / link.uplink_bps
+    t_up = np.where(np.isfinite(t_up), t_up, 0.0)
+    t_down_f = np.where(np.isfinite(t_down), t_down, 0.0)
+    # the historical round-clock expression, verbatim association order
+    times = 2 * link.latency_s + t_up_clock + t_down + comp_s
+    c_s = np.minimum(comp_s, deadline_s)
+    window = np.maximum(deadline_s - comp_s, 0.0)
+    tx_s = np.minimum(t_up, window)
+    up_end = comp_s + t_up
+    down_start = up_end                   # downlink follows the full uplink
+    return RoundTimeline(
+        pipelined=False,
+        comp_start=np.zeros((U, 1)), comp_end=comp_s.reshape(U, 1),
+        tx_start=comp_s.reshape(U, 1), tx_end=up_end.reshape(U, 1),
+        tx_bits=np.broadcast_to(np.asarray(bits.uplink, float),
+                                (U,)).reshape(U, 1),
+        down_start=down_start, down_end=down_start + t_down_f,
+        times_s=np.broadcast_to(np.asarray(times, float), (U,)),
+        compute_s=comp_s, compute_charged_s=c_s, tx_charged_s=tx_s,
+        down_window_s=_overlap(down_start, t_down_f, deadline_s),
+        can_tx=window > 0)
+
+
+def _pipelined(link, bits, comp_s, deadline_s, U):
+    comp_s = np.broadcast_to(np.asarray(comp_s, float), (U,))
+    n = max(int(bits.chunks), 1)
+    stream = bits.up_stream if bits.up_stream is not None else bits.uplink
+    tail = bits.up_tail if bits.up_stream is not None else 0.0
+    stream = np.broadcast_to(np.asarray(stream, float), (U,))
+    tail = np.broadcast_to(np.asarray(tail, float), (U,))
+    with np.errstate(divide="ignore"):
+        u = stream / link.uplink_bps
+        t_tail = tail / link.uplink_bps
+        t_down = np.asarray(bits.downlink, float) / link.downlink_bps
+    u = np.where(np.isfinite(u), u, 0.0)
+    t_tail = np.where(np.isfinite(t_tail), t_tail, 0.0)
+    t_down = np.where(np.isfinite(t_down), t_down, 0.0)
+    c = comp_s / n                                   # per-minibatch compute
+    i = np.arange(n)[None, :]                        # (1, n) chunk index
+    comp_start = i * c[:, None]
+    comp_end = (i + 1) * c[:, None]
+    # closed form of the streaming recurrence (see module docstring)
+    tx_start = np.maximum((i + 1) * c[:, None], c[:, None] + i * u[:, None])
+    tx_end = tx_start + u[:, None]
+    tail_start = tx_end[:, -1]                       # offload after last chunk
+    tail_end = tail_start + t_tail
+    up_finish = tail_end
+    down_start = up_finish
+    times = 2 * link.latency_s + up_finish + t_down
+    c_s = np.minimum(comp_s, deadline_s)
+    tx_s = (_overlap(tx_start, u[:, None], deadline_s).sum(axis=1)
+            + _overlap(tail_start, t_tail, deadline_s))
+    # a pipelined client can move a bit as soon as its FIRST chunk computes
+    can_tx = c < deadline_s
+    return RoundTimeline(
+        pipelined=True,
+        comp_start=comp_start, comp_end=comp_end,
+        tx_start=np.concatenate([tx_start, tail_start[:, None]], axis=1),
+        tx_end=np.concatenate([tx_end, tail_end[:, None]], axis=1),
+        tx_bits=np.concatenate([np.broadcast_to(stream[:, None], (U, n)),
+                                tail[:, None]], axis=1),
+        down_start=down_start, down_end=down_start + t_down,
+        times_s=np.broadcast_to(np.asarray(times, float), (U,)),
+        compute_s=comp_s, compute_charged_s=c_s, tx_charged_s=tx_s,
+        down_window_s=_overlap(down_start, t_down, deadline_s),
+        can_tx=can_tx)

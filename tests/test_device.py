@@ -268,8 +268,17 @@ BITS = RoundBits(uplink=10_000_000, downlink=10_000_000)
 
 def test_straggler_bits_tx_counts_only_moved_bits():
     """Regression: a deadline-cut straggler moved uplink_bps * tx window
-    bits and never received its downlink — bits_tx must count that, not the
-    full offered up+down traffic."""
+    bits plus the downlink bits it RECEIVED before the cutoff — bits_tx
+    must count exactly that, not the full offered up+down traffic.
+
+    Re-pinned for the moved-bits symmetry fix: the pre-timeline ledger
+    credited a straggler zero downlink even when the deadline cut it mid-
+    broadcast (uplink finished with window to spare).  The downlink segment
+    starts when the uplink finishes (latency-free, like the transmit
+    window), so its credit is downlink_bps * overlap of [uplink end,
+    uplink end + downlink airtime) with the deadline — zero exactly when
+    the client never finished its uplink, which is what the old accounting
+    assumed for every straggler."""
     cfg = WirelessConfig(model="static", mean_uplink_mbps=10.0,
                          mean_downlink_mbps=40.0, latency_s=0.0,
                          heterogeneity=1.5, deadline_s=1.0,
@@ -280,13 +289,20 @@ def test_straggler_bits_tx_counts_only_moved_bits():
     rep = s.step(0)
     dead = rep.scheduled & (rep.mask == 0)
     assert dead.any(), "setup must produce scheduled stragglers"
+    link = ch.sample(0)
     t_up = BITS.uplink / rep.uplink_bps
+    t_down = BITS.downlink / np.asarray(link.downlink_bps, float)
     expect = 0.0
+    saw_partial_down = False
     for u in range(8):
         if rep.mask[u] > 0:
             expect += BITS.uplink + BITS.downlink      # completed: all of it
         elif rep.scheduled[u]:
             expect += rep.uplink_bps[u] * min(t_up[u], 1.0)  # cut off
+            down_window = min(max(1.0 - t_up[u], 0.0), t_down[u])
+            expect += link.downlink_bps[u] * down_window
+            saw_partial_down |= down_window > 0
+    assert saw_partial_down, "setup must cut a straggler mid-downlink"
     assert rep.bits_tx == pytest.approx(expect)
     # strictly less than the old all-offered accounting
     offered = float((BITS.uplink + BITS.downlink) * rep.scheduled.sum())

@@ -1,0 +1,321 @@
+"""Pipelined streaming timeline, staleness-weighted async aggregation, and
+the straggler-accounting bugfix sweep.
+
+The timeline refactor's contracts, pinned here:
+
+- the pipelined makespan closes to ``c + u + (n-1)*max(c, u) + tail`` (one
+  hand-computed case, segment by segment) and is NEVER worse than the
+  serial ``n*c + n*u + tail`` (elementwise, property-style), collapsing to
+  it when compute is free or there is a single chunk;
+- ``pipeline=False`` + ``staleness_lambda=0`` is the pre-PR scheduler
+  (the golden-report regressions in tests/test_device.py pin the serial
+  path bit-for-bit; here we pin that the async machinery is genuinely
+  inert at lambda=0);
+- the staleness bank's ledger: banked on straggle, delivered on idle
+  rounds with age >= 1, superseded by fresh completions, replaced by newer
+  straggles, energy-charged background pushes;
+- the bugfix satellites: water-filled contention shares, top-k backfill
+  after contention withdrawal, personalize() invariance to preceding
+  training rounds.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import HierarchyConfig, TrainConfig, WirelessConfig
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.core.fedsim import FedSim
+from repro.data.synthetic import make_federated_image_data
+from repro.models import cnn
+from repro.wireless import (ChannelModel, ParticipationScheduler, RoundBits,
+                            build_timeline, waterfill_shares)
+from repro.wireless.channel import LinkState
+
+
+def _link(up, down=4e6, latency=0.01, U=1):
+    return LinkState(np.full(U, float(up)), np.full(U, float(down)),
+                     np.full(U, float(latency)))
+
+
+# ------------------------------------------------- pipelined makespan ------
+def test_pipelined_makespan_hand_computed():
+    """n=4 chunks, c=1s per chunk, u=2s per payload, 1s tail, 1s downlink:
+    the streaming recurrence gives tx windows [1,3) [3,5) [5,7) [7,9), the
+    tail [9,10), so the uplink finishes at c + u + 3*max(c,u) + tail = 10
+    and the round clock reads 2*latency + 10 + t_down = 11.02."""
+    bits = RoundBits(uplink=9_000_000, downlink=4_000_000,
+                     up_stream=2_000_000, up_tail=1_000_000, chunks=4)
+    link = _link(1e6)
+    tl = build_timeline(link, bits, np.array([4.0]), np.inf, 1,
+                        pipeline=True)
+    np.testing.assert_allclose(tl.tx_start[0], [1.0, 3.0, 5.0, 7.0, 9.0])
+    np.testing.assert_allclose(tl.tx_end[0], [3.0, 5.0, 7.0, 9.0, 10.0])
+    np.testing.assert_allclose(tl.down_start[0], 10.0)
+    np.testing.assert_allclose(tl.times_s[0], 0.02 + 10.0 + 1.0)
+    serial = build_timeline(link, bits, np.array([4.0]), np.inf, 1)
+    # serial: compute 4 + uplink 9 + downlink 1 (+ latency); pipelining
+    # saves exactly (n-1) * min(c, u) = 3 * 1
+    np.testing.assert_allclose(serial.times_s[0], 0.02 + 4.0 + 9.0 + 1.0)
+    np.testing.assert_allclose(serial.times_s[0] - tl.times_s[0], 3.0)
+
+
+def test_pipelined_deadline_caps_by_segment_overlap():
+    """A deadline mid-stream charges each uplink segment its overlap with
+    [0, T): at T=6 the windows [1,3) [3,5) [5,7) [7,9) [9,10) contribute
+    2 + 2 + 1 + 0 + 0 = 5 s, and compute charges min(4, 6) = 4 s."""
+    bits = RoundBits(uplink=9_000_000, downlink=4_000_000,
+                     up_stream=2_000_000, up_tail=1_000_000, chunks=4)
+    tl = build_timeline(_link(1e6), bits, np.array([4.0]), 6.0, 1,
+                        pipeline=True)
+    np.testing.assert_allclose(tl.tx_charged_s[0], 5.0)
+    np.testing.assert_allclose(tl.compute_charged_s[0], 4.0)
+    assert tl.can_tx[0]          # first chunk (1 s) computes inside 6 s
+
+
+def test_pipelined_never_worse_than_serial():
+    """Property sweep: for random rates, compute loads, and chunk counts,
+    the pipelined completion is <= serial everywhere, and equals it when
+    compute is free (c=0) or there is one chunk (nothing to overlap)."""
+    rng = np.random.default_rng(0)
+    for _ in range(50):
+        U = 8
+        n = int(rng.integers(1, 9))
+        stream = rng.uniform(1e5, 1e7)
+        tail = rng.uniform(0, 1e6)
+        bits = RoundBits(uplink=n * stream + tail, downlink=1e6,
+                         up_stream=stream, up_tail=tail, chunks=n)
+        link = LinkState(rng.uniform(1e5, 1e8, U), rng.uniform(1e6, 1e8, U),
+                         np.full(U, 0.01))
+        comp = rng.uniform(0, 10, U)
+        piped = build_timeline(link, bits, comp, np.inf, U, pipeline=True)
+        serial = build_timeline(link, bits, comp, np.inf, U)
+        assert (piped.times_s <= serial.times_s + 1e-9).all()
+        free = build_timeline(link, bits, np.zeros(U), np.inf, U,
+                              pipeline=True)
+        free_serial = build_timeline(link, bits, np.zeros(U), np.inf, U)
+        np.testing.assert_allclose(free.times_s, free_serial.times_s,
+                                   rtol=1e-12)
+        if n == 1:
+            np.testing.assert_allclose(piped.times_s, serial.times_s,
+                                       rtol=1e-12)
+
+
+# ----------------------------------------------- scheduler integration -----
+def _sched(U=8, **kw):
+    kw.setdefault("model", "static")
+    kw.setdefault("mean_uplink_mbps", 20.0)
+    kw.setdefault("mean_downlink_mbps", 80.0)
+    kw.setdefault("heterogeneity", 1.0)
+    cfg = WirelessConfig(**kw)
+    bits = RoundBits(uplink=40_000_000, downlink=10_000_000,
+                     up_stream=9_000_000, up_tail=4_000_000, chunks=4)
+    # ~1.4 s of compute at 0.5 GFLOP/s: comparable to the ~2 s uplink, so
+    # the pipelined overlap is worth ~(n-1) * min(c, u) ~ 1 s
+    return ParticipationScheduler(cfg, ChannelModel(cfg, U), bits,
+                                  flops=7e8)
+
+
+def test_pipeline_lifts_participation_under_tight_deadline():
+    """The PR's headline effect at scheduler scale: with non-trivial
+    compute, the same deadline admits strictly more pipelined clients."""
+    kw = dict(compute_gflops=0.5, compute_power_w=0.2, deadline_s=3.0,
+              seed=0)
+    serial = _sched(**kw).step(0)
+    piped = _sched(pipeline=True, **kw).step(0)
+    assert (piped.times_s <= serial.times_s + 1e-9).all()
+    assert piped.num_participants > serial.num_participants
+    assert piped.round_time_s <= serial.round_time_s + 1e-9
+
+
+def test_lambda_zero_keeps_async_machinery_inert():
+    """staleness_lambda=0 must not even materialize the stale report
+    arrays, and lambda>0 must not change WHO participates live (with an
+    infinite energy budget the background pushes cost nothing gateable)."""
+    kw = dict(deadline_s=2.2, selection="random", participation_prob=0.6,
+              seed=1)
+    s0, s1 = _sched(**kw), _sched(staleness_lambda=0.7, **kw)
+    for r in range(10):
+        r0, r1 = s0.step(r), s1.step(r)
+        assert r0.stale_banked is None and r0.stale_delivered is None
+        assert r1.stale_banked is not None
+        np.testing.assert_array_equal(r0.mask, r1.mask)
+        np.testing.assert_array_equal(r0.times_s, r1.times_s)
+        assert r0.round_time_s == r1.round_time_s
+        assert r1.bits_tx >= r0.bits_tx     # background pushes only ADD bits
+
+
+def test_stale_bank_ledger():
+    """Bank on straggle, deliver on an idle round with age >= 1, never
+    deliver and bank in the same round, drain energy for the pushes."""
+    s = _sched(deadline_s=2.2, selection="random", participation_prob=0.6,
+               staleness_lambda=0.5, energy_budget_j=1e6, tx_power_w=0.5,
+               seed=1)
+    banked_ever = np.zeros(8, bool)
+    delivered_any = False
+    prev_energy = s.energy_left.copy()
+    for r in range(30):
+        rep = s.step(r)
+        banked, deliv = rep.stale_banked, rep.stale_delivered > 0
+        # a bank comes only from a scheduled straggler; a delivery only
+        # from an idle (unscheduled) client — the sets cannot intersect
+        assert (banked <= (rep.scheduled & (rep.mask == 0))).all()
+        assert (deliv <= ~rep.scheduled).all()
+        assert not (banked & deliv).any()
+        assert (rep.stale_delivered[deliv] >= 1).all()
+        # deliveries require an earlier banking of that client
+        assert (deliv <= banked_ever).all()
+        banked_ever |= banked
+        delivered_any |= deliv.any()
+        assert (s.energy_left <= prev_energy + 1e-12).all()
+        prev_energy = s.energy_left.copy()
+    assert banked_ever.any() and delivered_any
+
+
+# --------------------------------------------------- FedSim async fold -----
+@pytest.fixture(scope="module")
+def small_fed():
+    return make_federated_image_data(4, alpha=0.5, train_per_class=20,
+                                     test_per_class=10, seed=0)
+
+
+def _fedsim(fed, wireless=None, seed=0, rounds=2):
+    h = HierarchyConfig(num_edge_servers=2, clients_per_es=2, kappa0=1,
+                        kappa1=2, global_rounds=rounds)
+    t = TrainConfig(learning_rate=0.05, batch_size=8, freeze_head=True)
+    return FedSim(CNN_CFG, fed, h, t, batches_per_epoch=1, seed=seed,
+                  wireless=wireless)
+
+
+def _async_wireless(lam):
+    # deadline tuned so the slowest of the 4 heterogeneous clients
+    # straggles whenever scheduled; random thinning gives it idle rounds
+    # to background-push the banked remainder
+    return WirelessConfig(model="static", mean_uplink_mbps=8.0,
+                          mean_downlink_mbps=32.0, latency_s=0.01,
+                          heterogeneity=1.0, deadline_s=6.0,
+                          selection="random", participation_prob=0.6,
+                          staleness_lambda=lam, seed=3)
+
+
+def test_fedsim_stale_fold_changes_aggregation(small_fed):
+    """With lambda > 0 a delivered bank joins the edge average (weight
+    alpha_u * lambda**s), so the trajectory must diverge from the
+    hard-dropout run FROM THE FIRST DELIVERY — while the live
+    participation stays identical (same channel, same thinning draws)."""
+    sim0 = _fedsim(small_fed, _async_wireless(0.0), rounds=3)
+    sim1 = _fedsim(small_fed, _async_wireless(0.5), rounds=3)
+    r0, r1 = sim0.run(log_every=1), sim1.run(log_every=1)
+    deliveries = sum(n.get("stale_delivered", 0) for n in r1.network)
+    assert deliveries > 0, "scenario must exercise at least one delivery"
+    assert sum(n.get("stale_banked", 0) for n in r1.network) > 0
+    for n0, n1 in zip(r0.network, r1.network):
+        assert n0["participants"] == n1["participants"]
+    assert r0.history[-1]["test_loss"] != r1.history[-1]["test_loss"]
+
+
+def test_fedsim_lambda_zero_logs_no_stale_fields(small_fed):
+    res = _fedsim(small_fed, _async_wireless(0.0)).run()
+    assert all("stale_banked" not in n for n in res.network)
+
+
+# ------------------------------------------- personalize reproducibility ---
+def test_personalize_invariant_to_preceding_rounds(small_fed):
+    """Regression (bugfix): personalize() used to sample its fine-tuning
+    minibatches from self.rng, ALREADY ADVANCED by run() — so the same
+    global params personalized differently depending on how much training
+    preceded the call.  With the dedicated seed+3 stream the heads depend
+    only on (seed, params): bit-identical across different run lengths."""
+    sim1, sim2 = _fedsim(small_fed), _fedsim(small_fed)
+    sim1.run(rounds=1)
+    sim2.run(rounds=2)                     # different rng advancement
+    params = cnn.init(jax.random.PRNGKey(42), CNN_CFG)
+    h1, e1 = sim1.personalize(params, steps=2)
+    h2, e2 = sim2.personalize(params, steps=2)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(a, b), h1, h2)
+    np.testing.assert_array_equal(e1["acc"], e2["acc"])
+
+
+# --------------------------------------------------- water-filling ---------
+def test_waterfill_no_caps_equals_one_shot_split():
+    w = np.array([1.0, 2.0, 1.0])
+    limits = np.full(3, 1e9)
+    share = waterfill_shares(4.0, w, limits, np.zeros(3, int),
+                             np.ones(3, bool))
+    np.testing.assert_allclose(share, [1.0, 2.0, 1.0])
+
+
+def test_waterfill_redistributes_capped_excess():
+    """A member whose limit is below its proportional share caps there and
+    the excess re-shares: no capacity strands while someone can use it."""
+    w = np.ones(3)
+    limits = np.array([0.5, 10.0, 10.0])
+    share = waterfill_shares(6.0, w, limits, np.zeros(3, int),
+                             np.ones(3, bool))
+    # one-shot would give 2.0 each, stranding 1.5 behind member 0's cap;
+    # water-filling re-shares it: 0.5 + 2.75 + 2.75 = 6.0 (full pipe)
+    np.testing.assert_allclose(share, [0.5, 2.75, 2.75])
+    assert share.sum() == pytest.approx(6.0)
+
+
+def test_waterfill_rate_proportional_weights_match_legacy_min():
+    """With weights == limits (the proportional contention profile) the
+    share/limit ratio is uniform per group, so the water-filled result is
+    exactly the legacy min(limit, one-shot share) — the reduction that
+    keeps the contention path bit-compatible."""
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        rates = rng.uniform(1.0, 100.0, 6)
+        groups = rng.integers(0, 2, 6)
+        active = rng.random(6) < 0.7
+        cap = rng.uniform(5.0, 300.0)
+        got = waterfill_shares(cap, rates, rates, groups, active)
+        tot = np.array([rates[active & (groups == g)].sum() for g in groups])
+        legacy = np.minimum(rates, cap * rates / np.maximum(tot, 1e-300))
+        np.testing.assert_allclose(got[active], legacy[active], rtol=1e-12)
+
+
+def test_waterfill_groups_are_independent():
+    w = np.ones(4)
+    limits = np.array([0.1, 10.0, 10.0, 10.0])
+    groups = np.array([0, 0, 1, 1])
+    share = waterfill_shares(2.0, w, limits, groups, np.ones(4, bool))
+    np.testing.assert_allclose(share, [0.1, 1.9, 1.0, 1.0])
+
+
+# ------------------------------------------------------ top-k backfill -----
+def test_topk_backfill_refills_contention_withdrawal():
+    """When the contended price forces a chosen client to withdraw, the
+    freed top-k slot is backfilled by the next-fastest affordable client
+    instead of silently running the round under k."""
+    cfg = WirelessConfig(model="static", mean_uplink_mbps=20.0,
+                         mean_downlink_mbps=80.0, heterogeneity=1.0,
+                         selection="topk", topk=2, es_uplink_mbps=20.0,
+                         tx_power_w=0.5, seed=0)
+    bits = RoundBits(uplink=40_000_000, downlink=10_000_000)
+    s = ParticipationScheduler(cfg, ChannelModel(cfg, 8), bits)
+    # private vs contended airtime of the two fastest clients: under the
+    # shared 20 Mbps pipe each pays more than on its private link; give
+    # the FASTEST client a budget that covers its private charge but not
+    # its contended one, so it must withdraw at contention time
+    link = s.channel.sample(0)
+    order = np.argsort(s.channel.round_time_s(link, bits))
+    fastest, second, third = order[0], order[1], order[2]
+    t_priv = bits.uplink / link.uplink_bps[fastest]
+    both = np.zeros(8, bool)
+    both[[fastest, second]] = True
+    t_cont = bits.uplink / s.channel.contended_uplink(
+        link, both, s.es_assign)[fastest]
+    assert t_cont > t_priv
+    # charges are tx_power_w * airtime; a budget strictly between the
+    # private and the contended charge passes gate 1 but not contention
+    budget = 0.5 * (cfg.tx_power_w * t_priv + cfg.tx_power_w * t_cont)
+    s.energy_left = np.full(8, 1e9)
+    s.energy_left[fastest] = budget
+    rep = s.step(0)
+    assert not rep.scheduled[fastest]          # withdrew at contended price
+    assert rep.scheduled[second] and rep.scheduled[third]  # backfilled
+    assert int(rep.scheduled.sum()) == 2                   # k held
+    # the withdrawer never transmitted: its budget is untouched
+    np.testing.assert_allclose(s.energy_left[fastest], budget)
