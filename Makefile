@@ -1,12 +1,15 @@
 # Local mirrors of the CI gates (.github/workflows/ci.yml).
-#   make lint   — tier 0: reprolint, the static contract gate (seconds)
-#   make test   — tier 1: fast pytest suite (slow marker deselected)
-#   make slow   — tier 2: the long end-to-end suite
-#   make check  — tier 0 then tier 1, the pre-commit sequence
+#   make lint         — tier 0: reprolint, the static contract gate (seconds)
+#   make test         — tier 1: fast pytest suite (slow marker deselected)
+#   make slow         — tier 2: the long end-to-end suite
+#   make check        — tier 0 then tier 1, the pre-commit sequence
+#   make resume-smoke — kill-and-resume bit-identity: a 2-round train run
+#                       vs the same run aborted after round 1 and resumed;
+#                       the final state checkpoints must be byte-identical
 
 PY ?= python
 
-.PHONY: lint test slow check
+.PHONY: lint test slow check resume-smoke
 
 lint:
 	$(PY) -m tools.reprolint src tests benchmarks examples
@@ -18,3 +21,19 @@ slow:
 	PYTHONPATH=src $(PY) -m pytest -m slow
 
 check: lint test
+
+# tiny but REAL: static channel + erasures + crashes, so the resumed run
+# must also replay the fault stream exactly to pass the bitwise diff
+RESUME_ARGS = --rounds 2 --clients 2 --seq 32 --micro 1 --local-steps 1 \
+	--channel static --erasure-prob 0.3 --crash-hazard 0.2 --ckpt-every 1
+
+resume-smoke:
+	rm -rf /tmp/resume_smoke && mkdir -p /tmp/resume_smoke
+	PYTHONPATH=src $(PY) -m repro.launch.train $(RESUME_ARGS) \
+		--ckpt-dir /tmp/resume_smoke/full
+	PYTHONPATH=src $(PY) -m repro.launch.train $(RESUME_ARGS) \
+		--ckpt-dir /tmp/resume_smoke/killed --abort-after 1
+	PYTHONPATH=src $(PY) -m repro.launch.train $(RESUME_ARGS) \
+		--ckpt-dir /tmp/resume_smoke/killed --resume
+	$(PY) -m tools.ckpt_diff /tmp/resume_smoke/full/state \
+		/tmp/resume_smoke/killed/state

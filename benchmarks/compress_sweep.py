@@ -63,9 +63,11 @@ def _codecs_for(codec: str, topk_frac: float):
 
 def _summarize(codec, channel, network, h, extra):
     parts = [n["participants"] for n in network] or [0]
-    sched = [n["scheduled"] for n in network] or [0]
+    # FedSim rows carry the scheduled COUNT, to_json_dict rows the (U,)
+    # bool list — np.sum collapses both to the count
+    sched = [np.sum(n["scheduled"]) for n in network] or [0]
     times = [n["round_time_s"] for n in network] or [0.0]
-    bits = [n["bits"] for n in network] or [0.0]
+    bits = [n.get("bits", n.get("bits_tx", 0.0)) for n in network] or [0.0]
     return {
         "codec": codec, "channel": channel,
         "participation_rate": float(np.mean(parts)) / h.num_clients,
@@ -109,13 +111,8 @@ def dry_run_one(codec: str, channel: str, *, deadline: float, rounds: int,
                   energy_budget=energy_budget, seed=seed),
         h.num_clients, comm, h.kappa0,
         es_assign=np.arange(h.num_clients) // h.clients_per_es)
-    network = []
-    for r in range(rounds * h.kappa1):
-        rep = sched.step(r)
-        network.append({"participants": rep.num_participants,
-                        "scheduled": int(rep.scheduled.sum()),
-                        "round_time_s": rep.round_time_s,
-                        "bits": rep.bits_tx})
+    network = [sched.step(r).to_json_dict()
+               for r in range(rounds * h.kappa1)]
     return _summarize(codec, channel, network, h,
                       {"deadline_s": deadline, "dry_run": True})
 

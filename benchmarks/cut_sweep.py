@@ -90,17 +90,12 @@ def dry_run_one(policy: str, channel: str, *, deadline: float, rounds: int,
     sched = make_scheduler(
         wireless, h.num_clients, kappa0=h.kappa0, comm_table=table,
         es_assign=np.arange(h.num_clients) // h.clients_per_es)
-    network = []
-    for r in range(rounds * h.kappa1):
-        rep = sched.step(r)
-        row = {"participants": rep.num_participants,
-               "round_time_s": rep.round_time_s}
-        if rep.mean_cut is not None:
-            row["mean_cut"] = rep.mean_cut
-        network.append(row)
+    network = [sched.step(r).to_json_dict()
+               for r in range(rounds * h.kappa1)]
     parts = [n["participants"] for n in network] or [0]
     times = [n["round_time_s"] for n in network] or [0.0]
-    cuts = [n["mean_cut"] for n in network if "mean_cut" in n]
+    cuts = [n["mean_cut"] for n in network
+            if n.get("mean_cut") is not None]
     return {
         "policy": policy,
         "channel": channel,

@@ -62,10 +62,15 @@ def _wireless(policy: str, sigma: float, *, channel: str, deadline: float,
 def _summarize(policy, sigma, network, h, extra):
     parts = [n["participants"] for n in network] or [0]
     times = [n["round_time_s"] for n in network] or [0.0]
-    bits = [n["bits"] for n in network] or [0.0]
-    cuts = [n["mean_cut"] for n in network if "mean_cut" in n]
-    comp = [n.get("compute_s_max", 0.0) for n in network] or [0.0]
-    cj = [n.get("compute_j", 0.0) for n in network] or [0.0]
+    bits = [n.get("bits", n.get("bits_tx", 0.0)) for n in network] or [0.0]
+    cuts = [n["mean_cut"] for n in network
+            if n.get("mean_cut") is not None]
+    # FedSim rows pre-reduce to compute_s_max / summed compute_j floats;
+    # to_json_dict rows carry the raw (U,) lists
+    comp = [np.max(n["compute_s"]) if n.get("compute_s") is not None
+            else n.get("compute_s_max", 0.0) for n in network] or [0.0]
+    cj = [np.sum(n["compute_j"]) if isinstance(n.get("compute_j"), list)
+          else n.get("compute_j") or 0.0 for n in network] or [0.0]
     return {
         "policy": policy, "compute_heterogeneity": sigma,
         "participation_rate": float(np.mean(parts)) / h.num_clients,
@@ -117,16 +122,8 @@ def dry_run_one(policy: str, sigma: float, *, rounds: int, seed: int,
         wireless, h.num_clients, kappa0=h.kappa0, comm_table=table,
         es_assign=np.arange(h.num_clients) // h.clients_per_es,
         fixed_cut=fixed_cut if fixed_cut in table else 0)
-    network = []
-    for r in range(rounds * h.kappa1):
-        rep = sched.step(r)
-        row = {"participants": rep.num_participants,
-               "round_time_s": rep.round_time_s, "bits": rep.bits_tx,
-               "compute_s_max": float(rep.compute_s.max()),
-               "compute_j": float(rep.compute_j.sum())}
-        if rep.mean_cut is not None:
-            row["mean_cut"] = rep.mean_cut
-        network.append(row)
+    network = [sched.step(r).to_json_dict()
+               for r in range(rounds * h.kappa1)]
     return _absolute_cut(_summarize(policy, sigma, network, h,
                                     {"dry_run": True}), fixed_cut)
 

@@ -1,0 +1,211 @@
+"""Fault-injection sweep: erasure_prob x recovery policy, graceful or not.
+
+The fault subsystem (``repro.wireless.faults``) claims graceful
+degradation: erased payloads retransmit (HARQ) as honestly-priced timeline
+segments, HARQ-exhausted updates flow into the staleness bank instead of
+vanishing, and every retransmitted bit/joule is visible in the accounting.
+This sweep puts a number on each claim.  The grid is erasure_prob in
+{0, 0.15, 0.3} x three recovery policies — the ONLY config deltas per row:
+
+- ``no-retry``:   max_retries=0, staleness_lambda=0 — a lost payload is a
+                  lost round (hard drop, the strawman);
+- ``harq``:       max_retries=3 — retransmit up to 3 times, still hard-drop
+                  what exhausts its retries or misses the deadline;
+- ``harq+stale``: max_retries=3, staleness_lambda=0.5 — retries PLUS the
+                  bank: what still fails delivers late and discounted.
+
+Each cell reports live participation, EFFECTIVE participation (live +
+stale deliveries), mean round time, total air bits, and the retransmit
+overhead (``retx_bits``, ``retx_j``) the HARQ policies pay for their
+robustness; full runs add final loss/accuracy.  The in-run acceptance bar
+(the fault-injection ISSUE), checked on the deterministic static channel:
+
+1. at erasure_prob=0.3 under the finite deadline, ``harq+stale`` EFFECTIVE
+   participation strictly exceeds ``no-retry`` participation — retries +
+   late delivery rescue what hard drop loses;
+2. every cell's retransmit overhead is reported (zero-erasure cells pay
+   exactly zero).
+
+``--dry-run`` drives the ParticipationScheduler alone (no training) with
+rows taken straight from ``RoundReport.to_json_dict()`` — seconds, not
+minutes; tier-1 CI smokes this mode.
+
+    PYTHONPATH=src python benchmarks/fault_sweep.py \
+        [--deadline 4.0] [--crash-hazard 0.0] [--rounds 2] [--dry-run] \
+        [--out BENCH_faults.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs.base import FaultConfig
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.configs.sweeps import sweep_hierarchy, sweep_train, sweep_wireless
+from repro.core.comm import comm_table_for_cnn
+from repro.core.fedsim import FedSim
+from repro.data.synthetic import make_federated_image_data
+from repro.wireless import make_scheduler
+
+# (policy name, max_retries, staleness_lambda): the only per-policy deltas
+POLICIES = (("no-retry", 0, 0.0), ("harq", 3, 0.0), ("harq+stale", 3, 0.5))
+ERASURES = (0.0, 0.15, 0.3)
+
+
+def _wireless(retries: int, lam: float, erasure: float, *, channel: str,
+              deadline: float, crash_hazard: float, seed: int):
+    """One cell's scenario: the shared sweep channel + a finite deadline +
+    random thinning (the stale bank delivers only on idle rounds) + the
+    cell's fault knobs."""
+    return sweep_wireless(
+        channel, deadline_s=deadline, selection="random",
+        participation_prob=0.8, staleness_lambda=lam,
+        faults=FaultConfig(erasure_prob=erasure, max_retries=retries,
+                           crash_hazard=crash_hazard),
+        seed=seed)
+
+
+def _stale_count(row) -> int:
+    """Deliveries in one network row: FedSim rows carry the count, raw
+    ``to_json_dict`` rows the per-client staleness list."""
+    v = row.get("stale_delivered") or 0
+    if isinstance(v, list):
+        return int(sum(1 for s in v if s > 0))
+    return int(v)
+
+
+def _summarize(policy, erasure, network, h, extra):
+    parts = [n["participants"] for n in network] or [0]
+    times = [n["round_time_s"] for n in network] or [0.0]
+    bits = [n.get("bits", n.get("bits_tx", 0.0)) for n in network] or [0.0]
+    deliv = [_stale_count(n) for n in network] or [0]
+    eff = [p + d for p, d in zip(parts, deliv)]
+    return {
+        "policy": policy,
+        "erasure_prob": erasure,
+        "participation_rate": float(np.mean(parts)) / h.num_clients,
+        "stale_delivered_per_round": float(np.mean(deliv)),
+        "effective_participation_rate": float(np.mean(eff)) / h.num_clients,
+        "mean_round_time_s": float(np.mean(times)),
+        "total_bits": float(np.sum(bits)),
+        "retx_bits": float(np.sum([n.get("retx_bits", 0.0)
+                                   for n in network])),
+        "retx_j": float(np.sum([n.get("retx_j", 0.0) for n in network])),
+        "failed": int(np.sum([np.sum(n.get("failed") or 0)
+                              for n in network])),
+        "crashed": int(np.sum([np.sum(n.get("crashed") or 0)
+                               for n in network])),
+        **extra,
+    }
+
+
+def run_one(fed, policy: str, retries: int, lam: float, erasure: float, *,
+            rounds: int, seed: int, **kw) -> dict:
+    """One full cell: real training under the fault schedule — erasure
+    failures bank and fold late, dead downlinks keep local models."""
+    h = sweep_hierarchy(rounds)
+    t = sweep_train()
+    sim = FedSim(CNN_CFG, fed, h, t, batches_per_epoch=2, seed=seed,
+                 wireless=_wireless(retries, lam, erasure, seed=seed, **kw))
+    res = sim.run(rounds=rounds, log_every=rounds)
+    return _summarize(policy, erasure, res.network, h, {
+        "final_loss": res.history[-1]["test_loss"],
+        "final_acc": res.history[-1]["test_acc"],
+        "total_sim_time_s": res.total_sim_time_s,
+    })
+
+
+def dry_run_one(policy: str, retries: int, lam: float, erasure: float, *,
+                rounds: int, seed: int, **kw) -> dict:
+    """Scheduler-only cell; network rows come straight from
+    ``RoundReport.to_json_dict()`` (the same serialization BENCH files
+    use, round-trip-tested in tests/test_faults.py)."""
+    h = sweep_hierarchy(rounds)
+    wireless = _wireless(retries, lam, erasure, seed=seed, **kw)
+    table = comm_table_for_cnn(CNN_CFG, dataset_size=400,
+                               batch_size=sweep_train().batch_size,
+                               batches_per_epoch=2)
+    sched = make_scheduler(
+        wireless, h.num_clients, kappa0=h.kappa0, comm_table=table,
+        es_assign=np.arange(h.num_clients) // h.clients_per_es)
+    # the acceptance bar is statistical (bank deliveries land ROUNDS after
+    # the failure they rescue), so the cheap scheduler-only sweep drives a
+    # floor of edge rounds no matter how small --rounds is
+    steps = max(rounds * h.kappa1, 12)
+    network = [sched.step(r).to_json_dict() for r in range(steps)]
+    return _summarize(policy, erasure, network, h, {"dry_run": True})
+
+
+def sweep(fed, *, dry_run: bool = False, **kw) -> list[dict]:
+    return [dry_run_one(pol, retries, lam, er, **kw) if dry_run
+            else run_one(fed, pol, retries, lam, er, **kw)
+            for pol, retries, lam in POLICIES for er in ERASURES]
+
+
+def check_acceptance(table) -> bool:
+    """(1) harq+stale effective participation strictly beats no-retry hard
+    drop at erasure 0.3; (2) retransmit overhead is reported per cell and
+    is exactly zero without erasures."""
+    rows = {(r["policy"], r["erasure_prob"]): r for r in table}
+    ok = True
+    hard = rows[("no-retry", 0.3)]["participation_rate"]
+    soft = rows[("harq+stale", 0.3)]["effective_participation_rate"]
+    good = soft > hard
+    ok &= good
+    print(f"[{'OK ' if good else 'FAIL'}] p=0.3 effective participation "
+          f"harq+stale {soft:.3f} > no-retry {hard:.3f}")
+    for key, r in rows.items():
+        has = "retx_bits" in r and "retx_j" in r
+        clean = r["erasure_prob"] > 0 or (r["retx_bits"] == 0.0
+                                          and r["retx_j"] == 0.0)
+        good = has and clean
+        ok &= good
+        print(f"[{'OK ' if good else 'FAIL'}] {key[0]} p={key[1]:.2f} "
+              f"retx overhead {r['retx_bits']:.0f} bits / "
+              f"{r['retx_j']:.3f} J")
+    return ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--channels", default="static", dest="channel",
+                    choices=["static", "rayleigh"],
+                    help="channel model shared by all cells")
+    ap.add_argument("--deadline", type=float, default=4.0,
+                    help="edge-round deadline; finite so HARQ retries can "
+                         "straggle and the stale bank has work to do")
+    ap.add_argument("--crash-hazard", type=float, default=0.0,
+                    help="per-round client crash probability added to "
+                         "every cell (0 = erasures only)")
+    ap.add_argument("--rounds", type=int, default=2)
+    ap.add_argument("--alpha", type=float, default=0.3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="scheduler-only sweep: no training, seconds")
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args(argv)
+
+    fed = None
+    if not args.dry_run:
+        fed = make_federated_image_data(8, alpha=args.alpha,
+                                        train_per_class=40,
+                                        test_per_class=20, seed=args.seed)
+    table = sweep(fed, dry_run=args.dry_run, channel=args.channel,
+                  rounds=args.rounds, seed=args.seed,
+                  deadline=args.deadline, crash_hazard=args.crash_hazard)
+    print(json.dumps(table, indent=2))
+    ok = check_acceptance(table)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(table, f, indent=2)
+    if not ok:
+        raise SystemExit("ACCEPTANCE FAILED: HARQ+staleness did not beat "
+                         "hard drop, or retransmit overhead is missing")
+    return table
+
+
+if __name__ == "__main__":
+    main()

@@ -64,11 +64,20 @@ def _wireless(pipeline: bool, lam: float, *, channel: str, deadline: float,
         pipeline=pipeline, staleness_lambda=lam, seed=seed)
 
 
+def _stale_count(row) -> int:
+    """Deliveries in one network row: FedSim rows carry the count,
+    ``RoundReport.to_json_dict`` rows the per-client staleness list."""
+    v = row.get("stale_delivered") or 0
+    if isinstance(v, list):
+        return int(sum(1 for s in v if s > 0))
+    return int(v)
+
+
 def _summarize(mode, network, h, extra):
     parts = [n["participants"] for n in network] or [0]
     times = [n["round_time_s"] for n in network] or [0.0]
-    bits = [n["bits"] for n in network] or [0.0]
-    deliv = [n.get("stale_delivered", 0) for n in network] or [0]
+    bits = [n.get("bits", n.get("bits_tx", 0.0)) for n in network] or [0.0]
+    deliv = [_stale_count(n) for n in network] or [0]
     eff = [p + d for p, d in zip(parts, deliv)]
     return {
         "mode": mode,
@@ -109,14 +118,8 @@ def dry_run_one(mode: str, pipeline: bool, lam: float, *, rounds: int,
     sched = make_scheduler(
         wireless, h.num_clients, kappa0=h.kappa0, comm_table=table,
         es_assign=np.arange(h.num_clients) // h.clients_per_es)
-    network = []
-    for r in range(rounds * h.kappa1):
-        rep = sched.step(r)
-        row = {"participants": rep.num_participants,
-               "round_time_s": rep.round_time_s, "bits": rep.bits_tx}
-        if rep.stale_delivered is not None:
-            row["stale_delivered"] = int((rep.stale_delivered > 0).sum())
-        network.append(row)
+    network = [sched.step(r).to_json_dict()
+               for r in range(rounds * h.kappa1)]
     return _summarize(mode, network, h, {"dry_run": True})
 
 

@@ -1,3 +1,6 @@
-from repro.checkpoint.ckpt import save_checkpoint, load_checkpoint, latest_step
+from repro.checkpoint.ckpt import (save_checkpoint, load_checkpoint,
+                                   latest_step, rng_state_array,
+                                   restore_rng_state)
 
-__all__ = ["save_checkpoint", "load_checkpoint", "latest_step"]
+__all__ = ["save_checkpoint", "load_checkpoint", "latest_step",
+           "rng_state_array", "restore_rng_state"]

@@ -4,6 +4,17 @@ Leaves are stored under their '/'-joined key paths; restore rebuilds into a
 caller-provided target structure (so dtypes/shardings can be re-imposed by
 the caller — sharded restore re-uses jax.device_put with the target's
 sharding).
+
+Crash safety: ``save_checkpoint`` writes to a ``.tmp.npz`` sidecar and
+``os.replace``s it into place, so ``latest_step`` (which matches only the
+final ``ckpt_<step>.npz`` names) can never observe a torn checkpoint.  A
+crash between the write and the rename strands the sidecar; the next
+``save_checkpoint`` in the directory sweeps all stale ``.tmp.npz`` files
+before writing its own.
+
+``rng_state_array``/``restore_rng_state`` round-trip a numpy PCG64
+``Generator``'s exact stream position through a plain uint64 array, so RNG
+streams checkpoint like any other leaf.
 """
 
 from __future__ import annotations
@@ -24,6 +35,14 @@ def _flatten(tree):
 
 def save_checkpoint(directory: str, step: int, tree) -> str:
     os.makedirs(directory, exist_ok=True)
+    # sweep sidecars stranded by a crash mid-save (never matched by
+    # latest_step, but they'd otherwise accumulate forever)
+    for f in os.listdir(directory):
+        if f.endswith(".tmp.npz"):
+            try:
+                os.remove(os.path.join(directory, f))
+            except OSError:
+                pass                      # a concurrent saver won the race
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
     tmp = path + ".tmp.npz"  # np.savez appends .npz unless already present
     np.savez(tmp, **_flatten(tree))
@@ -42,8 +61,13 @@ def latest_step(directory: str) -> int | None:
     return max(steps) if steps else None
 
 
-def load_checkpoint(directory: str, step: int, target):
-    """Restore into the structure of ``target`` (shapes must match)."""
+def load_checkpoint(directory: str, step: int, target, *, cast: bool = False):
+    """Restore into the structure of ``target`` (shapes must match).
+
+    Dtypes must match too: a checkpoint leaf whose dtype differs from the
+    target's raises unless ``cast=True`` explicitly opts into the
+    conversion (a silent fp32 -> int8 astype truncates without complaint).
+    """
     path = os.path.join(directory, f"ckpt_{step:08d}.npz")
     with np.load(path) as data:
         flat, treedef = jax.tree_util.tree_flatten_with_path(target)
@@ -55,5 +79,42 @@ def load_checkpoint(directory: str, step: int, target):
             arr = data[key]
             if tuple(arr.shape) != tuple(tgt.shape):
                 raise ValueError(f"{key}: shape {arr.shape} != {tgt.shape}")
-            leaves.append(arr.astype(tgt.dtype))
+            tgt_dtype = np.dtype(tgt.dtype)
+            if arr.dtype != tgt_dtype and not cast:
+                raise ValueError(
+                    f"{key}: checkpoint dtype {arr.dtype} != target "
+                    f"{tgt_dtype}; pass cast=True to convert explicitly")
+            leaves.append(arr.astype(tgt_dtype))
     return jax.tree_util.tree_unflatten(treedef, [v for _, v in zip(flat, leaves)])
+
+
+# ---------------------------------------------------------- RNG streams --
+_MASK64 = (1 << 64) - 1
+
+
+def rng_state_array(rng: np.random.Generator) -> np.ndarray:
+    """A PCG64 Generator's exact state as a (6,) uint64 array.
+
+    Layout: [state_hi, state_lo, inc_hi, inc_lo, has_uint32, uinteger] —
+    the 128-bit state/inc words split into 64-bit halves so the array
+    checkpoints losslessly through npz.
+    """
+    st = rng.bit_generator.state
+    if st["bit_generator"] != "PCG64":
+        raise TypeError(f"expected a PCG64 generator, got "
+                        f"{st['bit_generator']}")
+    s, inc = st["state"]["state"], st["state"]["inc"]
+    return np.array([s >> 64, s & _MASK64, inc >> 64, inc & _MASK64,
+                     st["has_uint32"], st["uinteger"]], dtype=np.uint64)
+
+
+def restore_rng_state(rng: np.random.Generator, arr) -> None:
+    """Restore a Generator's stream position from ``rng_state_array``."""
+    a = [int(x) for x in np.asarray(arr, np.uint64)]
+    if len(a) != 6:
+        raise ValueError(f"expected a (6,) rng state array, got "
+                         f"shape {np.asarray(arr).shape}")
+    rng.bit_generator.state = {
+        "bit_generator": "PCG64",
+        "state": {"state": (a[0] << 64) | a[1], "inc": (a[2] << 64) | a[3]},
+        "has_uint32": a[4], "uinteger": a[5]}

@@ -238,6 +238,39 @@ class TrainConfig:
 # Wireless network scenario (channel + participation; see repro.wireless)
 # --------------------------------------------------------------------------
 @dataclass(frozen=True)
+class FaultConfig:
+    """Fault-injection knobs (``repro.wireless.faults``).
+
+    The DEFAULTS encode ZERO faults: ``erasure_prob=0``, ``crash_hazard=0``
+    and an empty ``es_outage_trace`` leave the scheduler on its exact
+    fault-free code path (the golden regressions pin this bit-for-bit);
+    ``max_retries``/``backoff_s``/``failover`` are inert until one of the
+    hazards is switched on.  See ``repro/wireless/__init__.py`` for the
+    full semantics of each knob.
+    """
+    erasure_prob: float = 0.0        # per-attempt payload erasure probability
+    max_retries: int = 2             # HARQ retransmissions per payload (the
+    #                                  payload is sent at most 1 + max_retries
+    #                                  times); inert while erasure_prob == 0
+    backoff_s: float = 0.0           # radio idle gap before each retransmit
+    es_outage_trace: tuple[tuple[int, ...], ...] = ()  # round-major rows of
+    #                                  per-ES down flags (cycled over rounds,
+    #                                  resized over ESs); () -> no outages
+    crash_hazard: float = 0.0        # per-round probability a scheduled
+    #                                  client dies mid-round
+    failover: str = "reassoc"        # outage policy: "reassoc" moves a dead
+    #                                  ES's clients to the nearest live ES,
+    #                                  "skip" sits them out for the round
+
+    @property
+    def active(self) -> bool:
+        """True when any hazard is enabled (the scheduler builds a
+        FaultInjector); False keeps the fault-free path untouched."""
+        return (self.erasure_prob > 0.0 or self.crash_hazard > 0.0
+                or len(self.es_outage_trace) > 0)
+
+
+@dataclass(frozen=True)
 class WirelessConfig:
     """Per-client channel + participation knobs for the wireless simulator.
 
@@ -308,6 +341,10 @@ class WirelessConfig:
     codec_cycles_per_element: float = 0.0  # FLOPs a client spends per element
     #                                  crossing a LOSSY codec (encode up,
     #                                  decode down); 0 = codecs compute-free
+    # ---- fault injection + recovery (repro.wireless.faults) ----
+    faults: FaultConfig = FaultConfig()  # erasures/HARQ, ES outages, crashes;
+    #                                  the all-defaults instance is the exact
+    #                                  fault-free scheduler, bit-for-bit
     seed: int = 0
 
 

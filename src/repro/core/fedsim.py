@@ -181,6 +181,18 @@ class FedSim:
         self.staleness_lambda = (wireless.staleness_lambda
                                  if self.scheduler is not None else 0.0)
         self._stale_params = None        # stacked (U, ...) banked snapshots
+        # resumable run state (state_dict/load_state_dict): the stacked
+        # client replicas, the global-round cursor, the simulated clock, and
+        # the codec PRNG chain live on the instance, so run() continues
+        # where it left off and a checkpoint captures everything the
+        # trajectory depends on
+        self._stacked = None
+        self._round = 0
+        self._sim_time = 0.0
+        # codec PRNG chain: one subkey per stochastic-codec application,
+        # disjoint from the data-sampling RNG and the init key
+        self._ckey = (jax.random.fold_in(self.key, 0xC0DEC)
+                      if codecs is not None else None)
 
         U, B = hcfg.num_clients, hcfg.num_edge_servers
         self.U, self.B, self.Ub = U, B, hcfg.clients_per_es
@@ -368,6 +380,59 @@ class FedSim:
             return jax.tree.map(agg, stacked, fallback, stale)
         return jax.tree.map(agg, stacked, fallback)
 
+    def _mapped_edge_weights(self, mask, es_map, stale_w=None):
+        """(B, U) weight matrix for an ES-outage failover round.
+
+        ``es_map`` (``RoundReport.es_map``) sends each client's update to
+        its EFFECTIVE ES, so a re-associated client joins the live ES's
+        average with its own alpha_u weight, renormalized together with
+        that ES's home participants (and any stale deliveries).  Returns
+        ``(w, sw, empty)`` like :meth:`_masked_edge_weights`; ``empty``
+        marks ESs that aggregated nothing (dead, or no participants) —
+        their clients keep their fallback params.
+        """
+        B, U = self.B, self.U
+        m = np.asarray(mask, np.float64) > 0
+        onehot = np.zeros((B, U))
+        onehot[np.asarray(es_map, int), np.arange(U)] = 1.0
+        raw = onehot * np.where(m, self.alpha_u, 0.0)[None, :]
+        sw = np.zeros(U) if stale_w is None else np.asarray(stale_w,
+                                                            np.float64)
+        raw_stale = onehot * (self.alpha_u * sw)[None, :]
+        tot = (raw + raw_stale).sum(axis=1, keepdims=True)
+        denom = np.where(tot > 0, tot, 1.0)
+        return raw / denom, raw_stale / denom, tot[:, 0] <= 0
+
+    def _edge_aggregate_mapped(self, stacked, mask, fallback, es_map,
+                               stale=None, stale_w=None):
+        """Eqs. (14)-(15) under ES failover: aggregate by EFFECTIVE ES.
+
+        Each client receives the refreshed model of the ES it actually
+        worked with this round (``es_map``); a client whose effective ES
+        aggregated nothing keeps ``fallback`` — which is exactly how a dead
+        ES's edge model is carried forward (its skipped clients still hold
+        it).  Only reassoc-outage rounds route here; every other round uses
+        the home-(B, Ub) path bit-unchanged.
+        """
+        w64, sw64, empty = self._mapped_edge_weights(mask, es_map, stale_w)
+        w = jnp.asarray(w64, jnp.float32)                      # (B, U)
+        ws = jnp.asarray(sw64, jnp.float32)
+        recv = jnp.asarray(np.asarray(es_map, int))            # (U,)
+        keep_fb = jnp.asarray(empty)[recv]                     # (U,) bool
+
+        def agg(x, fb, st=None):
+            flat = x.reshape((self.U, -1))
+            es = w @ flat                                      # (B, prod)
+            if st is not None:
+                es = es + ws @ st.reshape((self.U, -1))
+            out = jnp.where(keep_fb[:, None], fb.reshape((self.U, -1)),
+                            es[recv])
+            return out.reshape(x.shape)
+
+        if stale is not None and stale_w is not None:
+            return jax.tree.map(agg, stacked, fallback, stale)
+        return jax.tree.map(agg, stacked, fallback)
+
     def _global_aggregate(self, stacked, es_mask=None):
         """Eq. (16): CS-level weighted average over ESs, broadcast back.
 
@@ -401,27 +466,43 @@ class FedSim:
         return jax.tree.map(agg, stacked)
 
     # --------------------------------------------------------------- run --
+    def _ensure_initialized(self):
+        """Materialize the stacked client replicas on first use (init is
+        deterministic in ``self.key``, so a restored checkpoint simply
+        overwrites this)."""
+        if self._stacked is None:
+            params0 = cnn.init(self.key, self.cfg)
+            self._stacked = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (self.U,) + x.shape),
+                params0)
+
+    def _client_keys(self):
+        self._ckey, sub = jax.random.split(self._ckey)
+        return jax.random.split(sub, self.U)
+
     def run(self, rounds: int | None = None, log_every: int = 5) -> FedSimResult:
+        """Train up to ``rounds`` TOTAL global rounds.
+
+        The round count is ABSOLUTE, not incremental: a fresh simulator
+        runs them all, while one resumed from a checkpoint
+        (``load_state_dict``/``restore``) — or simply run() a second time —
+        continues from its round cursor.  Kill at round k, restore, and
+        ``run(rounds)`` replays the uninterrupted trajectory bit-for-bit
+        (every RNG stream, the staleness bank, and the simulated clock are
+        checkpoint state).
+        """
         h, t = self.h, self.t
         rounds = rounds if rounds is not None else h.global_rounds
-        params0 = cnn.init(self.key, self.cfg)
-        stacked = jax.tree.map(
-            lambda x: jnp.broadcast_to(x[None], (self.U,) + x.shape), params0)
+        self._ensure_initialized()
+        stacked = self._stacked
         res = FedSimResult()
+        res.total_sim_time_s = self._sim_time
         xt, yt, wt = self._stacked_test()
 
         sched = self.scheduler
-        # codec PRNG chain: one subkey per stochastic-codec application,
-        # disjoint from the data-sampling RNG and the init key
-        ckey = (jax.random.fold_in(self.key, 0xC0DEC)
-                if self.codecs is not None else None)
+        client_keys = self._client_keys
 
-        def client_keys():
-            nonlocal ckey
-            ckey, sub = jax.random.split(ckey)
-            return jax.random.split(sub, self.U)
-
-        for t2 in range(rounds):
+        for t2 in range(self._round, rounds):
             round_losses = []
             es_any = np.zeros(self.B, bool)
             parts = []
@@ -445,9 +526,17 @@ class FedSim:
                 else:                                        # masked Eq. 14-15
                     rep = sched.step(self._edge_round)
                     self._edge_round += 1
-                    es_any |= (rep.mask.reshape(self.B, self.Ub) > 0).any(1)
+                    live = rep.mask > 0
+                    if rep.es_map is not None:
+                        # failover round: participation counts for the ES
+                        # the client actually worked with
+                        es_any |= np.bincount(rep.es_map[live],
+                                              minlength=self.B) > 0
+                    else:
+                        es_any |= live.reshape(self.B, self.Ub).any(1)
                     parts.append(rep.num_participants)
-                    res.total_sim_time_s += rep.round_time_s
+                    self._sim_time += rep.round_time_s
+                    res.total_sim_time_s = self._sim_time
                     row = {"edge_round": rep.round_idx,
                            "participants": rep.num_participants,
                            "scheduled": int(rep.scheduled.sum()),
@@ -458,6 +547,13 @@ class FedSim:
                     if rep.compute_s is not None and rep.compute_s.any():
                         row["compute_s_max"] = float(rep.compute_s.max())
                         row["compute_j"] = float(rep.compute_j.sum())
+                    if rep.crashed is not None:
+                        row["crashed"] = int(rep.crashed.sum())
+                        row["failed"] = int(rep.failed.sum())
+                        row["retx_bits"] = rep.retx_bits
+                        row["retx_j"] = rep.retx_j
+                    if rep.es_down is not None:
+                        row["es_down"] = int(rep.es_down.sum())
                     # staleness-weighted async fold (lambda > 0 only):
                     # deliveries read the snapshots banked in EARLIER rounds
                     # (delivered requires idle, banked requires scheduled,
@@ -472,7 +568,12 @@ class FedSim:
                             stale_w = np.where(
                                 deliv, lam ** rep.stale_delivered, 0.0)
                             stale_tree = self._stale_params
-                            es_any |= deliv.reshape(self.B, self.Ub).any(1)
+                            if rep.es_map is not None:
+                                es_any |= np.bincount(rep.es_map[deliv],
+                                                      minlength=self.B) > 0
+                            else:
+                                es_any |= deliv.reshape(self.B,
+                                                        self.Ub).any(1)
                         row["stale_banked"] = int(rep.stale_banked.sum())
                         row["stale_delivered"] = int(deliv.sum())
                         row["stale_dropped"] = int(rep.stale_dropped.sum())
@@ -490,14 +591,35 @@ class FedSim:
                                                 + (1,) * (x.ndim - 1)),
                                     x, b),
                                 self._stale_params, stacked)
-                    stacked = self._edge_aggregate(stacked, mask=rep.mask,
-                                                   fallback=prev,
-                                                   stale=stale_tree,
-                                                   stale_w=stale_w)
+                    if rep.es_map is not None:
+                        # reassoc failover: aggregate by the EFFECTIVE ES
+                        agged = self._edge_aggregate_mapped(
+                            stacked, rep.mask, prev, rep.es_map,
+                            stale=stale_tree, stale_w=stale_w)
+                    else:
+                        agged = self._edge_aggregate(stacked, mask=rep.mask,
+                                                     fallback=prev,
+                                                     stale=stale_tree,
+                                                     stale_w=stale_w)
+                    if (rep.down_failed is not None
+                            and rep.down_failed.any()):
+                        # lost downlink: the ES has this client's update
+                        # (it aggregated) but the client never received the
+                        # refreshed edge model — it keeps its own
+                        keep = jnp.asarray(rep.down_failed)
+                        agged = jax.tree.map(
+                            lambda new, old: jnp.where(
+                                keep.reshape((self.U,)
+                                             + (1,) * (new.ndim - 1)),
+                                old, new),
+                            agged, stacked)
+                    stacked = agged
             if sched is None:
                 stacked = self._global_aggregate(stacked)    # Eq. 16
             else:                                            # masked Eq. 16
                 stacked = self._global_aggregate(stacked, es_mask=es_any)
+            self._stacked = stacked
+            self._round = t2 + 1
 
             if (t2 + 1) % log_every == 0 or t2 == rounds - 1:
                 gl, ga = self._weighted_eval(stacked, xt, yt, wt)
@@ -511,6 +633,75 @@ class FedSim:
         res.global_params = jax.tree.map(lambda x: x[0], stacked)
         res.per_client_global = self._per_client_eval(stacked, xt, yt, wt)
         return res
+
+    # ----------------------------------------------------- checkpointing --
+    def state_dict(self) -> dict:
+        """Everything the trajectory depends on, as one npz-able pytree:
+        the stacked client replicas, the round cursors, the simulated
+        clock, the data-sampling RNG, the codec PRNG chain, the scheduler's
+        state (budgets, stale bank, channel/thinning/fault streams), and
+        the banked stale snapshots.  ``load_state_dict`` of this dict into
+        a freshly constructed simulator of the same config resumes the run
+        bit-identically (the acceptance test kills a run at round k and
+        diffs final params)."""
+        from repro.checkpoint.ckpt import rng_state_array
+        self._ensure_initialized()
+        out = {"round": np.int64(self._round),
+               "edge_round": np.int64(self._edge_round),
+               "sim_time_s": np.float64(self._sim_time),
+               "rng": rng_state_array(self.rng),
+               "params": self._stacked}
+        if self._ckey is not None:
+            out["codec_key"] = np.asarray(self._ckey)
+        if self.scheduler is not None:
+            out["scheduler"] = self.scheduler.state_dict()
+        if self.staleness_lambda > 0.0:
+            # fixed structure whether or not a bank exists yet, so the
+            # checkpoint tree shape is round-independent (npz restore
+            # rebuilds into the target structure)
+            has = self._stale_params is not None
+            out["stale_has"] = np.int64(has)
+            out["stale_params"] = (self._stale_params if has else
+                                   jax.tree.map(jnp.zeros_like,
+                                                self._stacked))
+        return out
+
+    def load_state_dict(self, state: dict) -> None:
+        from repro.checkpoint.ckpt import restore_rng_state
+        self._round = int(state["round"])
+        self._edge_round = int(state["edge_round"])
+        self._sim_time = float(state["sim_time_s"])
+        restore_rng_state(self.rng, state["rng"])
+        self._stacked = jax.tree.map(jnp.asarray, state["params"])
+        if self._ckey is not None:
+            self._ckey = jnp.asarray(state["codec_key"])
+        if self.scheduler is not None:
+            self.scheduler.load_state_dict(state["scheduler"])
+        if self.staleness_lambda > 0.0:
+            self._stale_params = (
+                jax.tree.map(jnp.asarray, state["stale_params"])
+                if int(state["stale_has"]) else None)
+
+    def save(self, directory: str, step: int | None = None) -> str:
+        """Atomic checkpoint of :meth:`state_dict` (step defaults to the
+        global-round cursor)."""
+        from repro.checkpoint.ckpt import save_checkpoint
+        return save_checkpoint(directory,
+                               self._round if step is None else step,
+                               self.state_dict())
+
+    def restore(self, directory: str, step: int | None = None) -> int | None:
+        """Load the latest (or ``step``'s) checkpoint from ``directory``
+        into this simulator; returns the restored step, or None when the
+        directory holds no checkpoint (fresh start)."""
+        from repro.checkpoint.ckpt import latest_step, load_checkpoint
+        if step is None:
+            step = latest_step(directory)
+        if step is None:
+            return None
+        state = load_checkpoint(directory, step, self.state_dict())
+        self.load_state_dict(state)
+        return step
 
     def _weighted_eval(self, stacked, xt, yt, wt):
         per = self._per_client_eval(stacked, xt, yt, wt)

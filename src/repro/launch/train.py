@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 import numpy as np
@@ -23,8 +24,9 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.checkpoint import save_checkpoint
-from repro.configs.base import HierarchyConfig, TrainConfig, WirelessConfig
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.configs.base import (FaultConfig, HierarchyConfig, TrainConfig,
+                                WirelessConfig)
 from repro.configs.registry import get_arch
 from repro.core import (build_optimizer, init_stacked_params,
                         make_host_round, make_phsfl_round,
@@ -77,6 +79,19 @@ def main(argv=None):
                     help="baseline: do NOT freeze the head")
     ap.add_argument("--finetune-steps", type=int, default=5)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="write a FULL training-state checkpoint (params, "
+                         "optimizer, round cursor, scheduler RNG/energy "
+                         "state) into {ckpt-dir}/state every N rounds; a "
+                         "killed run then resumes bit-identically (0 = "
+                         "final-params checkpoint only)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest state checkpoint in "
+                         "{ckpt-dir}/state (fresh start if none exists)")
+    ap.add_argument("--abort-after", type=int, default=None,
+                    help="kill the run right after this round's state "
+                         "checkpoint (crash simulation for the resume "
+                         "smoke test)")
     ap.add_argument("--seed", type=int, default=0)
     # ---- wireless scenario (repro.wireless) ----
     ap.add_argument("--channel", default="ideal",
@@ -112,6 +127,19 @@ def main(argv=None):
     ap.add_argument("--codec-cycles", type=float, default=0.0,
                     help="FLOPs per element crossing a lossy codec "
                          "(encode/decode compute; 0 = codecs compute-free)")
+    # ---- fault injection (repro.wireless.faults) ----
+    ap.add_argument("--erasure-prob", type=float, default=0.0,
+                    help="per-attempt payload erasure probability; erased "
+                         "transmissions retransmit (HARQ) as real timeline "
+                         "segments, priced in the deadline/energy/bits "
+                         "accounting")
+    ap.add_argument("--harq-retries", type=int, default=2,
+                    help="max retransmissions per payload before it FAILS")
+    ap.add_argument("--harq-backoff", type=float, default=0.0,
+                    help="radio-idle seconds before each retransmission")
+    ap.add_argument("--crash-hazard", type=float, default=0.0,
+                    help="per-round probability a scheduled client dies "
+                         "mid-round (timeline frozen at the crash instant)")
     ap.add_argument("--pipeline", action="store_true",
                     help="overlap client compute with uplink streaming at "
                          "minibatch granularity (repro.wireless.timeline); "
@@ -179,6 +207,11 @@ def main(argv=None):
                               compute_power_w=args.compute_power_w,
                               codec_cycles_per_element=args.codec_cycles,
                               pipeline=args.pipeline,
+                              faults=FaultConfig(
+                                  erasure_prob=args.erasure_prob,
+                                  max_retries=args.harq_retries,
+                                  backoff_s=args.harq_backoff,
+                                  crash_hazard=args.crash_hazard),
                               seed=args.seed)
         comm_kw = dict(seq_len=args.seq,
                        dataset_size=args.rounds * args.local_steps *
@@ -230,9 +263,39 @@ def main(argv=None):
         au = jnp.full((C,), 1.0 / C, jnp.float32)
         ab = jnp.ones((C,), jnp.float32)
 
-        t0 = time.time()
+        # ---- full-state checkpointing (kill + --resume = bit-identical):
+        # the state tree carries params, optimizer state, the round cursor,
+        # the simulated clock, and the scheduler's mutable state (energy
+        # budgets, stale bank, channel/thinning/fault RNG streams).  Per-
+        # round batches are seeded ``args.seed + r``, so nothing else is
+        # needed to replay the uninterrupted trajectory.
         sim_time = 0.0
-        for r in range(args.rounds):
+        start_round = 0
+        state_dir = (os.path.join(args.ckpt_dir, "state")
+                     if args.ckpt_dir else None)
+
+        def run_state(r):
+            st = {"params": params, "opt_state": opt_state,
+                  "round": np.int64(r), "sim_time_s": np.float64(sim_time)}
+            if scheduler is not None:
+                st["scheduler"] = scheduler.state_dict()
+            return st
+
+        if args.resume and state_dir:
+            step = latest_step(state_dir)
+            if step is not None:
+                st = load_checkpoint(state_dir, step, run_state(0))
+                params = jax.tree.map(jnp.asarray, st["params"])
+                opt_state = jax.tree.map(jnp.asarray, st["opt_state"])
+                start_round = int(st["round"])
+                sim_time = float(st["sim_time_s"])
+                if scheduler is not None:
+                    scheduler.load_state_dict(st["scheduler"])
+                log.log(resumed_from_round=float(start_round))
+
+        t0 = time.time()
+        metrics = {"loss": float("nan")}       # already-complete resume
+        for r in range(start_round, args.rounds):
             batch = _client_round_batch(cfg, C, args.local_steps, args.micro,
                                         args.seq, seed=args.seed + r)
             if scheduler is not None:
@@ -256,6 +319,14 @@ def main(argv=None):
                                                       batch, au, ab)
                 log.log(step=r, loss=metrics["loss"],
                         s_per_round=(time.time() - t0) / (r + 1))
+            if (state_dir and args.ckpt_every > 0
+                    and (r + 1) % args.ckpt_every == 0):
+                save_checkpoint(state_dir, r + 1, run_state(r + 1))
+            if args.abort_after is not None and r + 1 >= args.abort_after:
+                # simulated crash for the resume smoke test: die right
+                # after this round's checkpoint, skipping the final save
+                print(json.dumps({"aborted_after_round": r + 1}))
+                return
 
         # ---- personalization (Eq. 18) ----
         global_params = jax.tree.map(lambda x: x[0], params)

@@ -115,6 +115,42 @@ Staleness-weighted async edge aggregation (scheduler + ``core.fedsim``):
   CNN simulator (``FedSim``); the LM launcher prices the scheduler side
   only.
 
+Fault injection + recovery (``repro.wireless.faults``; all knobs live on
+``WirelessConfig.faults``, a ``FaultConfig`` whose all-defaults instance is
+the exact fault-free scheduler, bit-for-bit — the ``fault-free-default``
+regression pins this):
+
+- ``erasure_prob``: per-ATTEMPT probability that an uplink payload or the
+  downlink broadcast is erased.  Erased transmissions retransmit (HARQ) up
+  to ``max_retries`` times, each retry waiting ``backoff_s`` of radio idle
+  first; the retransmitted copies are real timeline segments, priced by
+  the same deadline gate / energy charge / moved-bits ledger as first
+  transmissions, and ``RoundReport.retx_bits``/``retx_j`` isolate the
+  overhead.  Graceful here means: a payload that exhausts its retries is
+  REPORTED failed (``RoundReport.failed``) and — with ``staleness_lambda``
+  > 0 — its undelivered remainder flows into the stale bank to land late
+  and discounted, never silently lost.  The cut controller prices the
+  expected HARQ expansion (``expected_attempts`` airtime multiplier) so
+  adaptive cuts stay honest under lossy channels.
+- ``es_outage_trace``: round-major 0/1 rows (cycled over rounds, resized
+  over ESs) marking edge servers DOWN for whole rounds.  ``failover``
+  picks the recovery: ``"reassoc"`` (default) re-associates a dead ES's
+  clients to the nearest live ES — they re-enter ITS contention pass and
+  join its aggregation — while ``"skip"`` sits them out (cost nothing).
+  Graceful here means: the dead ES's edge model is carried forward
+  unchanged (FedSim's zero-participant path) and banked stale pushes
+  pause while their target ES is down.
+- ``crash_hazard``: per-round probability a scheduled client dies at a
+  uniform instant mid-round.  Its timeline freezes at the crash cap —
+  partial compute charged, partial uplink credited as moved bits, the
+  straggler freeze rule at the crash instant — and its local state is
+  lost, so nothing is banked.  Graceful here means: the crash costs
+  exactly what was spent, the ES never waits past the silence, and the
+  report says who died (``RoundReport.crashed``).
+- All fault draws come from a dedicated ``seed+4`` stream with fixed
+  per-round shapes: enabling faults never perturbs fading/thinning/device
+  draws, and checkpoint/resume replays the exact fault schedule.
+
 Participation (``repro.wireless.scheduler.ParticipationScheduler``):
 
 - ``deadline_s``: edge-round deadline; a scheduled client whose simulated
@@ -143,6 +179,8 @@ from repro.wireless.channel import (ChannelModel, LinkState, RoundBits,
 from repro.wireless.cutter import (CutController, CutSpec, cut_specs,
                                    make_cut_controller)
 from repro.wireless.device import DeviceModel, client_round_flops
+from repro.wireless.faults import (FaultConfig, FaultInjector, FaultPlan,
+                                   expected_attempts)
 from repro.wireless.scheduler import ParticipationScheduler, RoundReport
 from repro.wireless.timeline import RoundTimeline, build_timeline
 
@@ -151,6 +189,7 @@ __all__ = [
     "waterfill_shares",
     "CutController", "CutSpec", "cut_specs", "make_cut_controller",
     "DeviceModel", "client_round_flops",
+    "FaultConfig", "FaultInjector", "FaultPlan", "expected_attempts",
     "ParticipationScheduler", "RoundReport", "make_scheduler",
     "RoundTimeline", "build_timeline",
 ]
@@ -171,13 +210,21 @@ def make_scheduler(cfg, num_clients: int, comm=None, kappa0: int = 1, *,
     """
     channel = ChannelModel(cfg, num_clients)
     device = DeviceModel(cfg, num_clients)
+    # HARQ pricing for the cut controller: only a lossy channel changes the
+    # estimates (ea == 1, backoff == 0 keeps them bit-identical)
+    ea, backoff = 1.0, 0.0
+    if cfg.faults.erasure_prob > 0.0:
+        ea = expected_attempts(cfg.faults.erasure_prob,
+                               cfg.faults.max_retries)
+        backoff = cfg.faults.backoff_s
     if comm_table is not None:
         cutter = make_cut_controller(
             comm_table, kappa0, policy=cfg.cut_policy, fixed_cut=fixed_cut,
             deadline_s=cfg.deadline_s, tx_power_w=cfg.tx_power_w,
             compute_power_w=cfg.compute_power_w,
             codec_cycles_per_element=cfg.codec_cycles_per_element,
-            pipeline=cfg.pipeline)
+            pipeline=cfg.pipeline, expected_attempts=ea,
+            harq_backoff_s=backoff)
         return ParticipationScheduler(cfg, channel, cutter=cutter,
                                       es_assign=es_assign, device=device)
     bits = client_round_bits(comm, kappa0)

@@ -92,9 +92,13 @@ class CutController:
     def __init__(self, specs: tuple[CutSpec, ...], policy: str = "fixed", *,
                  fixed_cut: int = 0, deadline_s: float = float("inf"),
                  tx_power_w: float = 0.5, compute_power_w: float = 0.0,
-                 pipeline: bool = False):
+                 pipeline: bool = False, expected_attempts: float = 1.0,
+                 harq_backoff_s: float = 0.0):
         if policy not in POLICIES:
             raise ValueError(f"unknown cut policy {policy!r}; one of {POLICIES}")
+        if expected_attempts < 1.0:
+            raise ValueError(f"expected_attempts must be >= 1, got "
+                             f"{expected_attempts}")
         if not specs:
             raise ValueError("need at least one candidate cut")
         if not 0 <= fixed_cut < len(specs):
@@ -107,6 +111,13 @@ class CutController:
         self.tx_power_w = tx_power_w
         self.compute_power_w = compute_power_w
         self.pipeline = pipeline
+        # HARQ pricing (repro.wireless.faults.expected_attempts): under an
+        # erasure channel every transmission repeats ``expected_attempts``
+        # times in expectation, with a backoff gap before each retry —
+        # adaptive policies must price retransmissions BEFORE they happen
+        # or they systematically pick cuts the channel cannot carry
+        self.expected_attempts = float(expected_attempts)
+        self.harq_backoff_s = float(harq_backoff_s)
         self.up_bits = np.array([s.bits.uplink for s in specs], np.float64)
         self.down_bits = np.array([s.bits.downlink for s in specs], np.float64)
         self.flops = np.array([s.flops for s in specs], np.float64)
@@ -183,6 +194,18 @@ class CutController:
             t_down = self.down_bits[:, None] / down_bps[None, :]
         t_up = np.nan_to_num(t_up, nan=0.0)        # inf rate: 0 airtime
         t_down = np.nan_to_num(t_down, nan=0.0)
+        # HARQ expansion: airtime repeats ea times in expectation; the TIME
+        # also pays (ea - 1) backoff gaps, the ENERGY only the airtime (the
+        # radio idles through backoff).  ea == 1, backoff == 0 leaves every
+        # expression bit-untouched (fault-free pricing).
+        ea, hb = self.expected_attempts, self.harq_backoff_s
+        t_up_air = t_up
+        harq = ea != 1.0 or hb != 0.0
+        if harq:
+            gap = (ea - 1.0) * hb
+            t_up_air = ea * t_up
+            t_up = t_up_air + gap
+            t_down = ea * t_down + gap
         t_comp = 0.0
         if sec_per_flop is not None:
             t_comp = self.flops[:, None] * np.asarray(sec_per_flop)[None, :]
@@ -192,6 +215,10 @@ class CutController:
                 t_tail = self.up_tail[:, None] / up_bps[None, :]
             u = np.nan_to_num(u, nan=0.0)
             t_tail = np.nan_to_num(t_tail, nan=0.0)
+            if harq:
+                # every stream payload and the tail repeat independently
+                u = ea * u + gap
+                t_tail = ea * t_tail + gap
             c = t_comp / self.chunks
             up_finish = c + u + (self.chunks - 1) * np.maximum(c, u) + t_tail
             times = 2 * np.asarray(latency_s)[None, :] + up_finish + t_down
@@ -199,7 +226,7 @@ class CutController:
             times = 2 * np.asarray(latency_s)[None, :] + t_up + t_down
             if sec_per_flop is not None:
                 times = times + t_comp
-        energy = self.tx_power_w * t_up
+        energy = self.tx_power_w * t_up_air
         if sec_per_flop is not None:
             energy = energy + self.compute_power_w * t_comp
         return times, energy
@@ -251,7 +278,9 @@ def make_cut_controller(comms: dict, kappa0: int, *, policy: str = "fixed",
                         tx_power_w: float = 0.5,
                         compute_power_w: float = 0.0,
                         codec_cycles_per_element: float = 0.0,
-                        pipeline: bool = False) -> CutController:
+                        pipeline: bool = False,
+                        expected_attempts: float = 1.0,
+                        harq_backoff_s: float = 0.0) -> CutController:
     """Convenience: per-cut CommModel table -> controller.
 
     ``fixed_cut`` may be a candidate NAME (e.g. ``"conv1"``, an LM depth, or
@@ -271,4 +300,6 @@ def make_cut_controller(comms: dict, kappa0: int, *, policy: str = "fixed",
         raise ValueError(f"fixed_cut {fixed_cut!r} not among {cells}")
     return CutController(specs, policy, fixed_cut=fixed_cut,
                          deadline_s=deadline_s, tx_power_w=tx_power_w,
-                         compute_power_w=compute_power_w, pipeline=pipeline)
+                         compute_power_w=compute_power_w, pipeline=pipeline,
+                         expected_attempts=expected_attempts,
+                         harq_backoff_s=harq_backoff_s)

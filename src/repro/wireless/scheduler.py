@@ -111,17 +111,61 @@ when every scheduled client made the deadline, else the full deadline (the
 ES waits it out).  Clients the scheduler never scheduled (energy, top-k,
 thinning) cost no waiting, and background stale pushes ride inside the
 existing window.
+
+Failure semantics (``WirelessConfig.faults``; repro.wireless.faults):
+
+- **Erasures + HARQ**: every uplink payload and the downlink broadcast is
+  erased i.i.d. per attempt with ``erasure_prob`` and retransmitted (after
+  ``backoff_s`` of radio idle) up to ``max_retries`` times.  Retransmitted
+  copies are ordinary timeline segments, so the deadline gate, the energy
+  charge, and the moved-bits ledger price them with the SAME freeze rule
+  as first transmissions; ``RoundReport.bits_tx`` counts AIR bits (every
+  attempt), and ``retx_bits``/``retx_j`` isolate the overhead beyond the
+  first attempts.  A client whose payload exhausts its retries is FAILED
+  (``RoundReport.failed``): not alive, but with ``staleness_lambda > 0``
+  its NOT-yet-delivered remainder (nominal bits minus erasure-survived
+  goodput) flows into the stale bank and can still land late — graceful
+  means "late and discounted", never "silently lost".  A client that
+  delivered its uplink but lost every downlink attempt (``down_failed``)
+  still participates in the aggregation (the ES has its update) but keeps
+  its own local model instead of the refreshed edge model (the FedSim
+  fold).
+- **ES outage + failover**: ``es_outage_trace`` marks whole ESs down for
+  whole rounds (``RoundReport.es_down``).  ``failover="reassoc"`` moves
+  the dead ES's clients to the nearest live ES (``RoundReport.es_map``),
+  where they re-enter that ES's contention pass and join ITS aggregation;
+  ``"skip"`` sits them out (never scheduled, cost nothing).  Banked stale
+  pushes pause while the client's effective ES is down.  A dead ES's edge
+  model is simply carried forward by FedSim's existing zero-participant
+  fallback.
+- **Client crash**: with probability ``crash_hazard`` per round, a
+  scheduled client dies at a uniform instant; its timeline freezes at
+  ``min(deadline, crash instant)`` — partial compute charged, partial
+  uplink credited as moved bits, exactly the straggler freeze applied at
+  the crash cap (``RoundReport.crashed``).  A crashed client loses its
+  local state, so its remainder is NOT banked (unlike a straggler or an
+  erasure failure).  The energy gate admits on the SAME crash-capped
+  charge it deducts, preserving gate == deduction (the simulator is
+  omniscient about its own fault draws; a conservative no-crash gate
+  would break that invariant).
+- ``FaultConfig()`` (all defaults) builds no injector at all: every code
+  path above is skipped and the scheduler is bit-identical to the
+  fault-free one (golden-pinned).  Fault draws come from the dedicated
+  ``seed+4`` stream with FIXED per-round shapes, so enabling faults never
+  perturbs fading/thinning draws and checkpoint/resume (``state_dict`` /
+  ``load_state_dict``) replays the exact fault schedule.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, fields
 
 import numpy as np
 
 from repro.configs.base import WirelessConfig
 from repro.wireless.channel import ChannelModel, LinkState, RoundBits
 from repro.wireless.device import DeviceModel
+from repro.wireless.faults import FaultInjector
 from repro.wireless.timeline import RoundTimeline, build_timeline
 
 
@@ -159,6 +203,27 @@ class RoundReport:
     stale_dropped: np.ndarray = None    # (U,) bool: a bank died unfolded
     #                                (superseded by a fresh round or
     #                                replaced by a newer straggle)
+    crashed: np.ndarray = None     # (U,) bool: died mid-round at the crash
+    #                                cap (None unless erasures/crashes on)
+    failed: np.ndarray = None      # (U,) bool: an uplink payload exhausted
+    #                                its HARQ retries (update never arrived)
+    down_failed: np.ndarray = None  # (U,) bool: alive (uplink delivered)
+    #                                but every downlink attempt was lost —
+    #                                FedSim keeps this client's local model
+    es_down: np.ndarray = None     # (B,) bool outage mask of this round
+    #                                (None: no outage this round)
+    es_map: np.ndarray = None      # (U,) int effective ES after failover
+    #                                (None except reassoc outage rounds)
+    retx_bits: float = 0.0         # air bits beyond first attempts (HARQ
+    #                                overhead; included in bits_tx)
+    retx_j: float = 0.0            # transmit joules beyond first attempts
+
+    # dtypes for from_json_dict (JSON erases them); absent keys default to
+    # float.  NOT a dataclass field (no annotation).
+    _DTYPES = {"mask": np.float64, "scheduled": bool, "cuts": int,
+               "codecs": int, "stale_banked": bool, "stale_delivered": int,
+               "stale_dropped": bool, "crashed": bool, "failed": bool,
+               "down_failed": bool, "es_down": bool, "es_map": int}
 
     @property
     def num_participants(self) -> int:
@@ -174,6 +239,37 @@ class RoundReport:
         sel = (self.scheduled if self.scheduled is not None
                and self.scheduled.any() else np.ones(len(self.cuts), bool))
         return float(self.cuts[sel].mean())
+
+    def to_json_dict(self) -> dict:
+        """JSON-safe dict: every field (ndarrays -> lists) plus the derived
+        ``participants`` and ``mean_cut`` the sweep benchmarks table.  The
+        inverse is :meth:`from_json_dict`."""
+        out = {}
+        for f in fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, np.ndarray):
+                v = v.tolist()
+            elif isinstance(v, (np.floating, np.integer, np.bool_)):
+                v = v.item()
+            out[f.name] = v
+        out["participants"] = self.num_participants
+        out["mean_cut"] = self.mean_cut
+        return out
+
+    @classmethod
+    def from_json_dict(cls, d: dict) -> "RoundReport":
+        """Rebuild a report from :meth:`to_json_dict` output (derived keys
+        are ignored; list fields come back as arrays of their native
+        dtype)."""
+        kw = {}
+        for f in fields(cls):
+            if f.name not in d:
+                continue
+            v = d[f.name]
+            if isinstance(v, list):
+                v = np.asarray(v, cls._DTYPES.get(f.name, float))
+            kw[f.name] = v
+        return cls(**kw)
 
 
 class ParticipationScheduler:
@@ -210,6 +306,19 @@ class ParticipationScheduler:
         # client's last straggle, and its age in edge rounds (-1 = no bank)
         self._stale_pending = np.zeros(self.U)
         self._stale_age = np.full(self.U, -1)
+        # fault injection (module docstring "Failure semantics"); the
+        # all-defaults FaultConfig builds NO injector and every fault code
+        # path below is skipped (bit-identity to the fault-free scheduler)
+        self.injector = None
+        if cfg.faults.active:
+            chunks = (self.cutter.chunks if self.cutter is not None
+                      else int(bits.chunks))
+            n_seg = (int(chunks) + 1) if cfg.pipeline else 1
+            self.injector = FaultInjector(
+                cfg.faults, self.U, n_seg,
+                int(self.es_assign.max()) + 1, cfg.seed)
+        self._plan = None                  # this round's FaultPlan (or None)
+        self._es_eff = self.es_assign      # effective ES map after failover
 
     def _bits_cuts(self, up_bps, down_bps, latency_s):
         """Cut decision (or the fixed bits) at the given rates."""
@@ -229,9 +338,12 @@ class ParticipationScheduler:
                   comp_s: np.ndarray) -> RoundTimeline:
         """The round's per-client event timeline at the given rates — the
         single source of truth for times, charges, and moved bits (module
-        docstring's timeline straggler semantics)."""
+        docstring's timeline straggler semantics).  ``self._plan`` (drawn
+        once at the top of ``step``) routes fault rounds to the HARQ/crash
+        builder; every rebuild of the round re-prices the SAME fates."""
         return build_timeline(link, bits, comp_s, self.cfg.deadline_s,
-                              self.U, pipeline=self.cfg.pipeline)
+                              self.U, pipeline=self.cfg.pipeline,
+                              plan=self._plan)
 
     def _contend(self, private: LinkState, scheduled: np.ndarray, bits, cuts,
                  comp_s, tl: RoundTimeline):
@@ -248,7 +360,7 @@ class ParticipationScheduler:
         cfg = self.cfg
         link = private
         eff_up = self.channel.contended_uplink(private, scheduled,
-                                               self.es_assign)
+                                               self._es_eff)
         if eff_up is private.uplink_bps:
             return (link, bits, cuts, comp_s, tl, scheduled,
                     np.zeros(self.U, bool), False)
@@ -275,7 +387,7 @@ class ParticipationScheduler:
             # withdrawal is possible; the survivors keep their
             # first-pass cut/codec choices.
             eff_up = self.channel.contended_uplink(private, scheduled,
-                                                   self.es_assign)
+                                                   self._es_eff)
             link = LinkState(eff_up, private.downlink_bps,
                              private.latency_s)
             tl = self._timeline(link, bits, comp_s)
@@ -285,6 +397,22 @@ class ParticipationScheduler:
         cfg = self.cfg
         link = self.channel.sample(round_idx)
         private = link
+        # ---- fault round state (module docstring "Failure semantics"):
+        # erasure fates and crash instants are drawn ONCE, before any
+        # timeline, so contention re-pricing re-uses the same outcomes;
+        # an ES outage remaps (reassoc) or sidelines (skip) its clients
+        self._plan = None
+        self._es_eff = self.es_assign
+        es_down = None
+        client_down = None
+        if self.injector is not None:
+            self._plan = self.injector.round_plan()
+            es_down = self.injector.es_down(round_idx)
+            if es_down is not None and es_down.any():
+                self._es_eff, client_down = self.injector.failover(
+                    es_down, self.es_assign)
+            else:
+                es_down = None
         bits, cuts = self._bits_cuts(link.uplink_bps, link.downlink_bps,
                                      link.latency_s)
         comp_s = self._compute_s(cuts)
@@ -294,6 +422,8 @@ class ParticipationScheduler:
 
         # gate 1: energy (deadline-capped charge) + a transmit window at all
         gate1 = (self.energy_left >= charge) & tl.can_tx
+        if client_down is not None:
+            gate1 &= ~client_down        # outage-skipped: never scheduled
         scheduled = gate1.copy()
         if cfg.selection == "topk" and cfg.topk > 0:     # gate 2a: k fastest
             order = np.argsort(np.where(scheduled, times0, np.inf))
@@ -327,14 +457,39 @@ class ParticipationScheduler:
         charge = tl.charge_j(cfg.tx_power_w, cfg.compute_power_w)
 
         alive = scheduled & (times <= cfg.deadline_s)    # gate 3: deadline
+        crashed = failed = down_failed = None
+        if self._plan is not None:
+            # gates 3b/3c: a crashed or HARQ-exhausted client's update never
+            # arrives; a lost downlink does NOT kill participation (the ES
+            # holds the uplink — the client just keeps its local model)
+            crashed = scheduled & tl.crashed
+            failed = scheduled & ~tl.crashed & ~self._plan.up_ok.all(axis=1)
+            alive &= tl.up_ok_all & ~tl.crashed
+            down_failed = alive & ~tl.down_ok
 
         # every scheduled client pays the deadline-capped charge (compute
         # joules + transmit joules) — the SAME quantity the energy gate
-        # admitted it on, so the budget can never go negative
+        # admitted it on, so the budget can never go negative (crash rounds:
+        # the charge is already crash-capped, gate == deduction still)
         self.energy_left = np.where(scheduled, self.energy_left - charge,
                                     self.energy_left)
 
-        if not alive.any():
+        if self._plan is not None:
+            # fault rounds: the ES waits the deadline out only for a
+            # DEADLINE straggler; a crashed client goes silent at its cap
+            # and a HARQ failure finishing early ends with its last attempt
+            if not scheduled.any():
+                round_time = 0.0
+            else:
+                strag = scheduled & ~tl.crashed & (times > cfg.deadline_s)
+                if strag.any() and np.isfinite(cfg.deadline_s):
+                    round_time = float(cfg.deadline_s)
+                else:
+                    eff_end = np.where(
+                        tl.crashed, 2 * link.latency_s + tl.cap_s, times)
+                    t = eff_end[scheduled].max()
+                    round_time = float(t) if np.isfinite(t) else 0.0
+        elif not alive.any():
             # a scheduled-but-straggling client still makes the ES wait
             round_time = (float(cfg.deadline_s)
                           if scheduled.any() and np.isfinite(cfg.deadline_s)
@@ -362,12 +517,40 @@ class ParticipationScheduler:
         down_rate = np.broadcast_to(np.asarray(link.downlink_bps, float),
                                     (self.U,))
         tx_s, down_win = tl.tx_charged_s, tl.down_window_s
-        with np.errstate(invalid="ignore"):      # ideal channel: inf * 0
-            moved_up = np.where(alive, up,
-                                np.where(tx_s > 0, up_rate * tx_s, 0.0))
-            moved_down = np.where(alive, down,
-                                  np.where(down_win > 0,
-                                           down_rate * down_win, 0.0))
+        retx_bits = retx_j = 0.0
+        if self._plan is not None:
+            # AIR accounting: every HARQ attempt moves bits (that's what the
+            # radio transmitted); a cap-truncated client credits rate x its
+            # charged airtime — the same freeze rule as first transmissions.
+            # The retransmit overhead is the airtime beyond FIRST attempts
+            # (``tl.first_tx_s``), priced in bits and transmit joules.
+            with np.errstate(invalid="ignore"):  # ideal channel: inf * 0
+                moved_up = np.where(tl.up_done, tl.air_up_bits,
+                                    np.where(tx_s > 0, up_rate * tx_s, 0.0))
+                moved_down = np.where(tl.down_done, tl.air_down_bits,
+                                      np.where(down_win > 0,
+                                               down_rate * down_win, 0.0))
+                d_up = np.maximum(tx_s - tl.first_tx_s, 0.0)
+                d_down = np.maximum(down_win - tl.first_down_s, 0.0)
+                retx_up = np.where(tl.up_done, tl.air_up_bits - up,
+                                   np.where(d_up > 0, up_rate * d_up, 0.0))
+                retx_down = np.where(tl.down_done, tl.air_down_bits - down,
+                                     np.where(d_down > 0,
+                                              down_rate * d_down, 0.0))
+            retx_bits = float((retx_up + retx_down)[scheduled].sum())
+            retx_j = float(cfg.tx_power_w
+                           * (d_up + d_down)[scheduled].sum())
+            # the stale bank holds what was never DELIVERED (nominal minus
+            # erasure-survived goodput), not what was never transmitted
+            bank_up = tl.goodput_up_bits
+        else:
+            with np.errstate(invalid="ignore"):      # ideal channel: inf * 0
+                moved_up = np.where(alive, up,
+                                    np.where(tx_s > 0, up_rate * tx_s, 0.0))
+                moved_down = np.where(alive, down,
+                                      np.where(down_win > 0,
+                                               down_rate * down_win, 0.0))
+            bank_up = moved_up
         moved = moved_up + moved_down
         bits_tx = float(moved[scheduled].sum())
 
@@ -375,12 +558,19 @@ class ParticipationScheduler:
         stale_banked = stale_delivered = stale_dropped = None
         if cfg.staleness_lambda > 0.0:
             stale_banked, stale_delivered, stale_dropped, bg_bits = \
-                self._stale_update(private, scheduled, alive, up, moved_up,
-                                   round_time)
+                self._stale_update(
+                    private, scheduled, alive, up, bank_up, round_time,
+                    push_ok=(None if es_down is None
+                             else ~es_down[self._es_eff]),
+                    bankable=None if self._plan is None else ~tl.crashed)
             bits_tx += bg_bits
 
         compute_j = np.where(scheduled,
                              cfg.compute_power_w * tl.compute_charged_s, 0.0)
+        es_map = (self._es_eff.copy()
+                  if es_down is not None
+                  and not np.array_equal(self._es_eff, self.es_assign)
+                  else None)
         return RoundReport(round_idx=round_idx, mask=alive.astype(np.float64),
                            times_s=times, round_time_s=round_time,
                            energy_left_j=self.energy_left.copy(),
@@ -390,10 +580,16 @@ class ParticipationScheduler:
                            compute_s=np.asarray(comp_s, float).copy(),
                            compute_j=compute_j, stale_banked=stale_banked,
                            stale_delivered=stale_delivered,
-                           stale_dropped=stale_dropped)
+                           stale_dropped=stale_dropped,
+                           crashed=crashed, failed=failed,
+                           down_failed=down_failed,
+                           es_down=None if es_down is None
+                           else es_down.copy(),
+                           es_map=es_map, retx_bits=retx_bits, retx_j=retx_j)
 
     def _stale_update(self, private: LinkState, scheduled, alive, up,
-                      moved_up, round_time: float):
+                      moved_up, round_time: float, *, push_ok=None,
+                      bankable=None):
         """One round of the staleness bank's state machine.
 
         Ages every bank; background-pushes idle banks' remainders at the
@@ -403,6 +599,13 @@ class ParticipationScheduler:
         completion supersedes; banks this round's new straggler remainders
         (replacing any older bank).  Returns the three (U,) report arrays
         plus the background bits moved.
+
+        Fault hooks: ``push_ok`` (a (U,) bool, default all-True) pauses
+        background pushes whose effective ES is down this round (the bank
+        survives, aging); ``bankable`` masks out clients whose remainder
+        must NOT be banked (a crashed client lost its local state).  On a
+        fault round ``moved_up`` is the GOODPUT (delivered nominal bits),
+        so the remainder banked is exactly what never arrived.
         """
         cfg, U = self.cfg, self.U
         stale_banked = np.zeros(U, bool)
@@ -415,6 +618,8 @@ class ParticipationScheduler:
                                        self._stale_age)
             superseded = has_bank & alive    # a fresh update landed instead
             idle = has_bank & ~scheduled     # radio free: background push
+            if push_ok is not None:
+                idle &= push_ok              # effective ES down: push waits
             rate = np.broadcast_to(np.asarray(private.uplink_bps, float),
                                    (U,))
             with np.errstate(divide="ignore", invalid="ignore"):
@@ -443,6 +648,8 @@ class ParticipationScheduler:
             self._stale_age = np.where(clear, -1, self._stale_age)
             self._stale_pending = np.where(clear, 0.0, self._stale_pending)
         strag = scheduled & ~alive
+        if bankable is not None:
+            strag &= bankable                # crashed: nothing left to bank
         if strag.any():
             # a newer straggle replaces any surviving older bank
             stale_dropped |= strag & (self._stale_age >= 0)
@@ -452,3 +659,35 @@ class ParticipationScheduler:
             self._stale_age = np.where(strag, 0, self._stale_age)
             stale_banked |= strag
         return stale_banked, stale_delivered, stale_dropped, bg_bits
+
+    # ------------------------------------------------------ checkpointing --
+    def state_dict(self) -> dict:
+        """Everything mutable, as flat numpy arrays (checkpoint-ready):
+        energy budgets, the staleness bank, and every RNG stream the
+        scheduler's trajectory depends on (thinning, channel fading, fault
+        draws).  ``load_state_dict`` on a freshly built scheduler of the
+        same config resumes the trajectory bit-identically."""
+        from repro.checkpoint.ckpt import rng_state_array
+        out = {"energy_left_j": self.energy_left.copy(),
+               "stale_pending": self._stale_pending.copy(),
+               "stale_age": self._stale_age.copy(),
+               "rng": rng_state_array(self._rng),
+               "channel_rng": rng_state_array(self.channel._rng)}
+        if self.injector is not None:
+            out["fault_rng"] = rng_state_array(self.injector._rng)
+        return out
+
+    def load_state_dict(self, state: dict) -> None:
+        from repro.checkpoint.ckpt import restore_rng_state
+        self.energy_left = np.asarray(state["energy_left_j"], float).copy()
+        self._stale_pending = np.asarray(state["stale_pending"],
+                                         float).copy()
+        self._stale_age = np.asarray(state["stale_age"], int).copy()
+        restore_rng_state(self._rng, state["rng"])
+        restore_rng_state(self.channel._rng, state["channel_rng"])
+        if self.injector is not None:
+            if "fault_rng" not in state:
+                raise ValueError("checkpoint has no fault RNG state but "
+                                 "faults are configured — resuming would "
+                                 "fork the fault schedule")
+            restore_rng_state(self.injector._rng, state["fault_rng"])

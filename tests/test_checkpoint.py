@@ -33,3 +33,56 @@ def test_shape_mismatch_raises(tmp_path):
         load_checkpoint(d, 0, {"w": jnp.ones((2, 2))})
     with pytest.raises(KeyError):
         load_checkpoint(d, 0, {"w2": jnp.ones((3, 3))})
+
+
+def test_dtype_mismatch_raises_unless_cast(tmp_path):
+    """A silent astype can truncate (fp32 -> int8); the load refuses dtype
+    drift unless the caller opts in with cast=True."""
+    import pytest
+    d = str(tmp_path / "c")
+    save_checkpoint(d, 0, {"w": jnp.full((2,), 1.5, jnp.float32)})
+    with pytest.raises(ValueError, match="cast=True"):
+        load_checkpoint(d, 0, {"w": jnp.zeros((2,), jnp.int8)})
+    # host-side np target: jnp would silently flatten float64 to float32
+    out = load_checkpoint(d, 0, {"w": np.zeros((2,), np.float64)},
+                          cast=True)
+    assert np.asarray(out["w"]).dtype == np.float64
+    np.testing.assert_array_equal(np.asarray(out["w"]), [1.5, 1.5])
+
+
+def test_crash_mid_save_leaves_no_torn_checkpoint(tmp_path):
+    """Simulated crash: a stranded ``.tmp.npz`` sidecar (written but never
+    os.replace'd) is invisible to latest_step — the previous complete
+    checkpoint stays current — and the next save sweeps it away."""
+    import os
+    d = str(tmp_path / "c")
+    save_checkpoint(d, 1, {"w": jnp.ones((2,))})
+    # crash mid-save of step 2: the sidecar exists, the real file doesn't
+    torn = os.path.join(d, "ckpt_00000002.npz.tmp.npz")
+    np.savez(torn, w=np.zeros((2,)))
+    assert latest_step(d) == 1
+    restored = load_checkpoint(d, 1, {"w": jnp.zeros((2,))})
+    np.testing.assert_array_equal(np.asarray(restored["w"]), [1.0, 1.0])
+    save_checkpoint(d, 2, {"w": jnp.full((2,), 2.0)})
+    assert not os.path.exists(torn)             # swept on the next save
+    assert latest_step(d) == 2
+
+
+def test_rng_state_round_trip():
+    """rng_state_array/restore_rng_state reproduce the stream exactly,
+    including the cached-uint32 half-word state."""
+    import pytest
+    from repro.checkpoint import restore_rng_state, rng_state_array
+    rng = np.random.default_rng(7)
+    rng.standard_normal(13)
+    rng.integers(0, 10)          # leaves a cached uint32 in the generator
+    arr = rng_state_array(rng)
+    assert arr.shape == (6,) and arr.dtype == np.uint64
+    want = rng.standard_normal(8)
+    other = np.random.default_rng(0)
+    restore_rng_state(other, arr)
+    np.testing.assert_array_equal(other.standard_normal(8), want)
+    with pytest.raises(ValueError):
+        restore_rng_state(other, np.zeros(4, np.uint64))
+    with pytest.raises(TypeError):
+        rng_state_array(np.random.Generator(np.random.MT19937(0)))

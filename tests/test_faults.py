@@ -1,0 +1,396 @@
+"""Fault injection + recovery: erasures/HARQ, ES outages, crashes, resume.
+
+The subsystem's contracts, pinned here:
+
+- ``FaultConfig()`` defaults encode ZERO faults (the reprolint
+  fault-free-default gate): ``active`` is False, the scheduler builds no
+  injector, and an outage-only injector (``needs_plan`` False) leaves the
+  per-round reports bit-identical to a fault-free scheduler;
+- the HARQ attempt expansion, hand-computed segment by segment: a
+  retransmission waits ``backoff_s``, airs the full payload again, and
+  air bits / goodput / first-attempt airtime split accordingly;
+- a crash truncates the timeline at the crash instant: partial compute
+  and airtime are charged, the undelivered payload is NOT goodput, the
+  client never banks (its local state died with it), and energy budgets
+  stay non-negative under sustained chaos;
+- ES outage failover: ``reassoc`` re-homes a dead ES's clients to the
+  nearest live ES (visible in ``RoundReport.es_map``), ``skip`` sits them
+  out; stale background pushes pause while the effective ES is down;
+- determinism + resume: same seed => identical multi-round trajectories;
+  ``state_dict``/``load_state_dict`` replay rounds k.. bit-identically
+  (including the fault stream); FedSim kill-at-k + restore reproduces the
+  uninterrupted run's final parameters bit-for-bit;
+- ``RoundReport.to_json_dict``/``from_json_dict`` round-trips every field
+  through actual JSON text (the BENCH file format).
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.configs.base import (FaultConfig, HierarchyConfig, TrainConfig,
+                                WirelessConfig)
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.core.fedsim import FedSim
+from repro.data.synthetic import make_federated_image_data
+from repro.wireless import (ChannelModel, ParticipationScheduler, RoundBits,
+                            build_timeline)
+from repro.wireless.channel import LinkState
+from repro.wireless.faults import (FAULT_SEED_OFFSET, FaultInjector,
+                                   FaultPlan, expected_attempts)
+from repro.wireless.scheduler import RoundReport
+
+BITS = RoundBits(uplink=10_000_000, downlink=10_000_000)
+
+
+def _link(up, down=1e6, latency=0.01, U=1):
+    return LinkState(np.full(U, float(up)), np.full(U, float(down)),
+                     np.full(U, float(latency)))
+
+
+def _plan(attempts, ok, down_attempts=1, down_ok=True, crash=np.inf,
+          backoff=0.0, U=1):
+    return FaultPlan(up_attempts=np.full((U, 1), attempts, int),
+                     up_ok=np.full((U, 1), ok, bool),
+                     down_attempts=np.full(U, down_attempts, int),
+                     down_ok=np.full(U, down_ok, bool),
+                     crash_frac=np.full(U, crash, float),
+                     backoff_s=backoff)
+
+
+def _sched(U=8, faults=None, **kw):
+    kw.setdefault("model", "static")
+    kw.setdefault("mean_uplink_mbps", 10.0)
+    kw.setdefault("mean_downlink_mbps", 40.0)
+    kw.setdefault("latency_s", 0.0)
+    kw.setdefault("heterogeneity", 1.0)
+    if faults is not None:
+        kw["faults"] = faults
+    cfg = WirelessConfig(**kw)
+    return ParticipationScheduler(cfg, ChannelModel(cfg, U), BITS,
+                                  es_assign=np.arange(U) // (U // 2))
+
+
+# ------------------------------------------------ fault-free defaults ------
+def test_fault_free_default():
+    """The reprolint ``fault-free-default`` gate: all-defaults FaultConfig
+    encodes zero faults, so constructing it can never change behavior."""
+    f = FaultConfig()
+    assert f.erasure_prob == 0.0
+    assert f.crash_hazard == 0.0
+    assert f.es_outage_trace == ()
+    assert f.backoff_s == 0.0
+    assert f.active is False
+    assert _sched().injector is None          # no injector ever built
+    assert WirelessConfig(model="static").faults == f
+
+
+def test_outage_only_injector_is_inert_without_outages():
+    """An all-zeros outage trace turns the injector ON but ``needs_plan``
+    OFF: no fault RNG is consumed per round and every report matches the
+    fault-free scheduler exactly."""
+    quiet = _sched(faults=FaultConfig(es_outage_trace=((0, 0),)))
+    clean = _sched()
+    assert quiet.injector is not None
+    assert not quiet.injector.needs_plan
+    for r in range(5):
+        a, b = quiet.step(r), clean.step(r)
+        np.testing.assert_array_equal(a.mask, b.mask)
+        np.testing.assert_array_equal(a.times_s, b.times_s)
+        assert a.bits_tx == b.bits_tx
+        assert a.round_time_s == b.round_time_s
+        assert a.retx_bits == 0.0 and a.retx_j == 0.0
+        assert a.es_down is None and a.es_map is None
+    np.testing.assert_array_equal(quiet.energy_left, clean.energy_left)
+
+
+def test_expected_attempts_truncated_geometric():
+    assert expected_attempts(0.0, 5) == 1.0
+    assert expected_attempts(0.7, 0) == 1.0         # no retries = 1 attempt
+    np.testing.assert_allclose(expected_attempts(0.5, 1), 1.5)
+    np.testing.assert_allclose(expected_attempts(0.3, 3),
+                               (1 - 0.3 ** 4) / 0.7)
+    assert expected_attempts(1.0, 3) == 4.0         # every attempt airs
+
+
+def test_injector_validates_config():
+    for bad in (dict(erasure_prob=1.5), dict(crash_hazard=-0.1),
+                dict(max_retries=-1), dict(backoff_s=-1.0),
+                dict(failover="nope")):
+        with pytest.raises(ValueError):
+            FaultInjector(FaultConfig(**bad), 4, 1, 2, 0)
+
+
+def test_plan_draws_are_deterministic_and_schedule_independent():
+    """Same seed => same plans; the stream position after round r depends
+    on r alone (fixed draw shapes), never on scheduling outcomes."""
+    cfg = FaultConfig(erasure_prob=0.4, max_retries=2, crash_hazard=0.2)
+    a = FaultInjector(cfg, 6, 1, 2, seed=9)
+    b = FaultInjector(cfg, 6, 1, 2, seed=9)
+    for _ in range(4):
+        pa, pb = a.round_plan(), b.round_plan()
+        np.testing.assert_array_equal(pa.up_attempts, pb.up_attempts)
+        np.testing.assert_array_equal(pa.up_ok, pb.up_ok)
+        np.testing.assert_array_equal(pa.down_attempts, pb.down_attempts)
+        np.testing.assert_array_equal(pa.down_ok, pb.down_ok)
+        np.testing.assert_array_equal(pa.crash_frac, pb.crash_frac)
+    assert (FaultInjector(cfg, 6, 1, 2, seed=9)._rng.bit_generator.state
+            != a._rng.bit_generator.state)          # streams advanced
+
+
+# ----------------------------------------------------- HARQ timeline -------
+def test_harq_retransmission_hand_computed():
+    """1 client, serial: compute 1 s, payload 2 s at the link rate, 0.5 s
+    backoff, 2 attempts.  Attempt 1 spans [1, 3), the retransmission waits
+    the backoff and spans [3.5, 5.5), the downlink (1 s) follows, so the
+    round closes at 2*latency + 6.5.  Air bits double, goodput does not."""
+    bits = RoundBits(uplink=2_000_000, downlink=1_000_000)
+    plan = _plan(attempts=2, ok=True, backoff=0.5)
+    tl = build_timeline(_link(1e6), bits, np.array([1.0]), np.inf, 1,
+                        plan=plan)
+    np.testing.assert_allclose(tl.tx_start[0], [1.0, 3.5])
+    np.testing.assert_allclose(tl.tx_end[0], [3.0, 5.5])
+    np.testing.assert_allclose(tl.down_end[0], 6.5)
+    np.testing.assert_allclose(tl.times_s[0], 0.02 + 6.5)
+    np.testing.assert_allclose(tl.air_up_bits[0], 4_000_000)    # both tries
+    np.testing.assert_allclose(tl.goodput_up_bits[0], 2_000_000)  # one copy
+    np.testing.assert_allclose(tl.tx_charged_s[0], 4.0)
+    np.testing.assert_allclose(tl.first_tx_s[0], 2.0)   # retx airtime = 2.0
+    assert tl.up_ok_all[0] and tl.down_ok[0] and not tl.crashed[0]
+
+
+def test_exhausted_retries_deliver_nothing():
+    """up_ok=False after every attempt: the airtime is spent and charged,
+    but the payload is never goodput and the client is not up_ok."""
+    bits = RoundBits(uplink=2_000_000, downlink=1_000_000)
+    tl = build_timeline(_link(1e6), bits, np.array([1.0]), np.inf, 1,
+                        plan=_plan(attempts=3, ok=False))
+    assert not tl.up_ok_all[0]
+    np.testing.assert_allclose(tl.air_up_bits[0], 6_000_000)
+    np.testing.assert_allclose(tl.goodput_up_bits[0], 0.0)
+    np.testing.assert_allclose(tl.tx_charged_s[0], 6.0)
+
+
+def test_erasure_prob_one_fails_every_scheduled_client():
+    s = _sched(faults=FaultConfig(erasure_prob=1.0, max_retries=2))
+    rep = s.step(0)
+    assert rep.num_participants == 0
+    np.testing.assert_array_equal(rep.failed, rep.scheduled)
+    assert rep.scheduled.any()
+    assert rep.retx_bits > 0.0                  # the retries really aired
+
+
+def test_failed_payloads_flow_into_the_stale_bank():
+    """HARQ exhaustion does not hard-drop under staleness: the undelivered
+    update banks (goodput 0 => full remainder) and arrives late on an idle
+    round, discounted — participation recovers."""
+    s = _sched(faults=FaultConfig(erasure_prob=1.0, max_retries=0),
+               selection="random", participation_prob=0.6,
+               staleness_lambda=0.5, deadline_s=30.0)
+    rep = s.step(0)
+    assert (rep.stale_banked == rep.failed).all()       # exactly the failed
+    delivered = 0
+    for r in range(1, 12):
+        delivered += int((s.step(r).stale_delivered > 0).sum())
+    assert delivered > 0
+
+
+# ---------------------------------------------------------- crashes --------
+def test_crash_truncates_and_charges_partially():
+    """Crash at half the activity span (inf deadline): compute 1 s, uplink
+    [1, 3), downlink [3, 4) => span 4, cap 2.  One second of airtime and
+    the full compute are charged; the payload misses the cap entirely."""
+    bits = RoundBits(uplink=2_000_000, downlink=1_000_000)
+    tl = build_timeline(_link(1e6), bits, np.array([1.0]), np.inf, 1,
+                        plan=_plan(attempts=1, ok=True, crash=0.5))
+    assert tl.crashed[0]
+    np.testing.assert_allclose(tl.cap_s[0], 2.0)
+    np.testing.assert_allclose(tl.compute_charged_s[0], 1.0)
+    np.testing.assert_allclose(tl.tx_charged_s[0], 1.0)     # of [1, 3)
+    np.testing.assert_allclose(tl.goodput_up_bits[0], 0.0)
+    assert not tl.up_ok_all[0] and not tl.up_done[0]
+
+
+def test_crashed_clients_never_bank_and_budgets_stay_nonneg():
+    s = _sched(faults=FaultConfig(crash_hazard=0.5, erasure_prob=0.2,
+                                  max_retries=1),
+               staleness_lambda=0.5, deadline_s=5.0, energy_budget_j=3.0)
+    saw_crash = False
+    for r in range(15):
+        rep = s.step(r)
+        assert (rep.energy_left_j >= -1e-9).all()
+        if rep.crashed.any():
+            saw_crash = True
+            assert not (rep.stale_banked & rep.crashed).any()
+            assert not (rep.mask.astype(bool) & rep.crashed).any()
+    assert saw_crash
+
+
+def test_es_does_not_wait_past_the_crash_silence():
+    """A lone crashed client's round clock is the crash cap (+ RTT), not
+    the time its transfer would have taken."""
+    s = _sched(U=2, faults=FaultConfig(crash_hazard=1.0), selection="topk",
+               topk=2)
+    rep = s.step(0)
+    assert rep.crashed.all()
+    tl_cap = rep.times_s[rep.scheduled].max()
+    assert rep.round_time_s <= tl_cap
+    assert rep.num_participants == 0
+
+
+# ------------------------------------------------- ES outage/failover ------
+def test_outage_reassoc_rehomes_clients():
+    """Trace alternates {no outage, ES1 down}.  On outage rounds every
+    client of ES1 re-associates to ES0 (visible in es_map) and ES0's pool
+    doubles; stale pushes toward the dead ES pause."""
+    s = _sched(faults=FaultConfig(es_outage_trace=((0, 0), (0, 1))))
+    a = s.step(0)
+    assert a.es_down is None and a.es_map is None
+    b = s.step(1)
+    np.testing.assert_array_equal(b.es_down, [False, True])
+    np.testing.assert_array_equal(b.es_map, np.zeros(8, int))
+    assert b.scheduled.any()
+
+
+def test_outage_skip_sits_clients_out():
+    s = _sched(faults=FaultConfig(es_outage_trace=((0, 1),),
+                                  failover="skip"))
+    for r in range(3):
+        rep = s.step(r)
+        np.testing.assert_array_equal(rep.es_down, [False, True])
+        assert rep.es_map is None
+        assert not rep.scheduled[4:].any()      # ES1's clients sat out
+        assert not rep.mask[4:].astype(bool).any()
+
+
+def test_all_es_down_is_a_wasted_round():
+    s = _sched(faults=FaultConfig(es_outage_trace=((1, 1),)))
+    rep = s.step(0)
+    assert rep.num_participants == 0
+    assert not rep.scheduled.any()
+    assert rep.round_time_s == 0.0
+
+
+# ----------------------------------------- determinism + JSON + resume -----
+CHAOS = dict(faults=FaultConfig(erasure_prob=0.25, max_retries=2,
+                                backoff_s=0.05, crash_hazard=0.15,
+                                es_outage_trace=((0, 0), (0, 1), (0, 0))),
+             selection="random", participation_prob=0.7,
+             staleness_lambda=0.5, deadline_s=8.0)
+
+_CMP = ("mask", "times_s", "round_time_s", "energy_left_j", "scheduled",
+        "bits_tx", "stale_banked", "stale_delivered", "stale_dropped",
+        "crashed", "failed", "down_failed", "es_down", "es_map",
+        "retx_bits", "retx_j")
+
+
+def _assert_reports_equal(a: RoundReport, b: RoundReport):
+    for name in _CMP:
+        va, vb = getattr(a, name), getattr(b, name)
+        if va is None or vb is None:
+            assert va is None and vb is None, name
+        else:
+            np.testing.assert_array_equal(va, vb, err_msg=name)
+
+
+def test_chaos_trajectory_is_deterministic():
+    s1, s2 = _sched(**CHAOS), _sched(**CHAOS)
+    for r in range(10):
+        _assert_reports_equal(s1.step(r), s2.step(r))
+
+
+def test_scheduler_state_dict_resumes_bit_identically():
+    """Run 10 rounds straight vs snapshot-at-4 + resume in a FRESH
+    scheduler: rounds 4..9 replay bit-for-bit, fault stream included."""
+    ref = _sched(**CHAOS)
+    want = [ref.step(r) for r in range(10)]
+    s = _sched(**CHAOS)
+    for r in range(4):
+        s.step(r)
+    snap = s.state_dict()
+    assert "fault_rng" in snap
+    fresh = _sched(**CHAOS)
+    fresh.load_state_dict(snap)
+    for r in range(4, 10):
+        _assert_reports_equal(fresh.step(r), want[r])
+
+
+def test_resume_without_fault_stream_raises():
+    plain = _sched()
+    with pytest.raises(ValueError):
+        _sched(**CHAOS).load_state_dict(plain.state_dict())
+
+
+def test_round_report_json_round_trip():
+    """Every field survives to_json_dict -> json text -> from_json_dict,
+    with arrays restored at their native dtypes (chaos round: the fault
+    fields are populated; plain round: they round-trip as None)."""
+    chaos = _sched(**CHAOS)
+    for rep in [chaos.step(1), chaos.step(2), _sched().step(0)]:
+        d = json.loads(json.dumps(rep.to_json_dict()))
+        assert d["participants"] == rep.num_participants
+        back = RoundReport.from_json_dict(d)
+        for f in RoundReport._DTYPES:
+            v, w = getattr(rep, f), getattr(back, f)
+            if v is None:
+                assert w is None, f
+            else:
+                assert w.dtype == np.asarray(v).dtype, f
+                np.testing.assert_array_equal(w, v, err_msg=f)
+        for f in ("round_idx", "round_time_s", "bits_tx", "retx_bits",
+                  "retx_j"):
+            assert getattr(back, f) == getattr(rep, f), f
+        np.testing.assert_array_equal(back.times_s, rep.times_s)
+        np.testing.assert_array_equal(back.energy_left_j, rep.energy_left_j)
+
+
+@pytest.fixture(scope="module")
+def fed_data():
+    return make_federated_image_data(8, alpha=0.3, train_per_class=40,
+                                     test_per_class=20, seed=0)
+
+
+def _chaos_sim(fed_data):
+    h = HierarchyConfig(num_edge_servers=2, clients_per_es=4, kappa0=1,
+                        kappa1=1, global_rounds=3)
+    t = TrainConfig(learning_rate=0.05, batch_size=16)
+    w = WirelessConfig(model="static", mean_uplink_mbps=10.0,
+                       mean_downlink_mbps=40.0, latency_s=0.0,
+                       heterogeneity=1.0, selection="random",
+                       participation_prob=0.7, staleness_lambda=0.5,
+                       deadline_s=8.0,
+                       faults=FaultConfig(erasure_prob=0.25, max_retries=1,
+                                          crash_hazard=0.2,
+                                          es_outage_trace=((0, 0), (0, 1))))
+    return FedSim(CNN_CFG, fed_data, h, t, batches_per_epoch=1, seed=0,
+                  wireless=w)
+
+
+def test_fedsim_kill_and_resume_bit_identical(fed_data, tmp_path):
+    """The ISSUE's acceptance bar: train 3 rounds under chaos in one go vs
+    kill after round 2 + restore in a FRESH sim + finish — the final
+    stacked parameters (and the RNG-driven trajectory behind them) agree
+    bit-for-bit."""
+    ref = _chaos_sim(fed_data)
+    res_ref = ref.run(rounds=3, log_every=3)
+
+    sim = _chaos_sim(fed_data)
+    sim.run(rounds=2, log_every=2)
+    d = str(tmp_path / "state")
+    sim.save(d)
+
+    fresh = _chaos_sim(fed_data)
+    assert fresh.restore(d) == 2
+    res = fresh.run(rounds=3, log_every=3)
+
+    for a, b in zip(jax.tree.leaves(ref._stacked),
+                    jax.tree.leaves(fresh._stacked)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(res_ref.global_params),
+                    jax.tree.leaves(res.global_params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert res.history[-1]["test_loss"] == res_ref.history[-1]["test_loss"]
+    assert fresh.restore(str(tmp_path / "nowhere")) is None

@@ -153,6 +153,38 @@ class TestAstCheckers:
                 return np.asarray(x, np.float64)
         """)
 
+    def test_fault_default_on_hazard_caught(self):
+        # a default-on hazard (or a hazard with no default at all) forks
+        # every fault-free golden the moment FaultConfig() is constructed
+        assert "fault-free-default" in _rules("""
+            from dataclasses import dataclass
+            @dataclass(frozen=True)
+            class FaultConfig:
+                erasure_prob: float = 0.1
+        """)
+        assert "fault-free-default" in _rules("""
+            class FaultConfig:
+                es_outage_trace: tuple = ((0, 1),)
+        """)
+        assert "fault-free-default" in _rules("""
+            class FaultConfig:
+                crash_hazard: float
+        """)
+
+    def test_fault_free_defaults_clean(self):
+        # zero/empty hazard defaults pass; non-hazard knobs are free
+        assert not _rules("""
+            from dataclasses import dataclass
+            @dataclass(frozen=True)
+            class FaultConfig:
+                erasure_prob: float = 0.0
+                max_retries: int = 2
+                backoff_s: float = 0.0
+                es_outage_trace: tuple = ()
+                crash_hazard: float = 0.0
+                failover: str = "reassoc"
+        """)
+
 
 # ----------------------------------------------------------- suppressions
 class TestSuppressions:

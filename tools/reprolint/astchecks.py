@@ -24,6 +24,11 @@ Rules (see engine.RULES / README.md):
 - ``mutable-default``   — list/dict/set default arguments.
 - ``float64-literal``   — explicit float64 dtypes in accelerator code;
   jax runs x64-disabled, so these silently truncate to float32.
+- ``fault-free-default`` — a class named ``FaultConfig`` whose hazard
+  fields (``erasure_prob``, ``crash_hazard``, ``backoff_s``,
+  ``es_outage_trace``) default to anything but zero/empty.  The whole
+  fault subsystem's bit-identity story rests on ``FaultConfig()`` meaning
+  "no faults"; a default-on hazard would silently fork every golden.
 """
 
 from __future__ import annotations
@@ -69,6 +74,7 @@ def check_source(source: str, path: str) -> list[Finding]:
     out += _check_nonfrozen_static(tree, path)
     out += _check_mutable_default(tree, path)
     out += _check_float64(tree, path)
+    out += _check_fault_free_default(tree, path)
     return out
 
 
@@ -455,4 +461,65 @@ def _check_float64(tree: ast.Module, path: str) -> list[Finding]:
                         "float64-literal", path, kw.value.lineno,
                         'dtype="float64" in accelerator code: jax runs '
                         'x64-disabled, so this silently becomes float32'))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# fault-free-default
+# ---------------------------------------------------------------------------
+# hazard field -> predicate its default AST node must satisfy to encode
+# "this hazard is off"
+def _is_zero(node: ast.AST) -> bool:
+    return (isinstance(node, ast.Constant)
+            and isinstance(node.value, (int, float))
+            and not isinstance(node.value, bool) and node.value == 0)
+
+
+def _is_empty_tuple(node: ast.AST) -> bool:
+    if isinstance(node, ast.Tuple) and not node.elts:
+        return True
+    # field(default=()) / field(default_factory=tuple)
+    if isinstance(node, ast.Call) and _attr_chain(node.func)[-1:] == ["field"]:
+        for kw in node.keywords:
+            if kw.arg == "default":
+                return _is_empty_tuple(kw.value)
+            if kw.arg == "default_factory":
+                return (isinstance(kw.value, ast.Name)
+                        and kw.value.id == "tuple")
+    return False
+
+
+_FAULT_HAZARDS = {"erasure_prob": (_is_zero, "0.0"),
+                  "crash_hazard": (_is_zero, "0.0"),
+                  "backoff_s": (_is_zero, "0.0"),
+                  "es_outage_trace": (_is_empty_tuple, "()")}
+
+
+def _check_fault_free_default(tree: ast.Module, path: str) -> list[Finding]:
+    """Any class literally named FaultConfig must default its hazard knobs
+    to zero/empty — ``FaultConfig()`` MUST mean "no faults" (the fault-free
+    golden regressions depend on it)."""
+    out = []
+    for node in ast.walk(tree):
+        if not (isinstance(node, ast.ClassDef) and node.name == "FaultConfig"):
+            continue
+        for stmt in node.body:
+            if not (isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)
+                    and stmt.target.id in _FAULT_HAZARDS):
+                continue
+            pred, want = _FAULT_HAZARDS[stmt.target.id]
+            if stmt.value is None:
+                out.append(Finding(
+                    "fault-free-default", path, stmt.lineno,
+                    f"FaultConfig.{stmt.target.id} has no default: "
+                    f"FaultConfig() must construct with zero faults "
+                    f"(default it to {want})"))
+            elif not pred(stmt.value):
+                out.append(Finding(
+                    "fault-free-default", path, stmt.lineno,
+                    f"FaultConfig.{stmt.target.id} defaults to a live "
+                    f"hazard: the all-defaults config must encode zero "
+                    f"faults (expected {want}) or every fault-free golden "
+                    f"regression silently forks"))
     return out

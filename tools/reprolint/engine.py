@@ -40,6 +40,9 @@ RULES: dict[str, Rule] = {r.id: r for r in (
          "function signature", "ast"),
     Rule("float64-literal", "explicit float64 dtype in accelerator code "
          "(jax default is x64-disabled; this silently truncates)", "ast"),
+    Rule("fault-free-default", "a FaultConfig hazard field defaults to a "
+         "non-zero value (a default-on fault would break the fault-free "
+         "bit-identity goldens)", "ast"),
     # --- layer 2: Pallas kernel contracts --------------------------------
     Rule("pallas-triplet", "a kernels/<name>/ package is missing one of "
          "kernel.py / ref.py / ops.py", "pallas"),
