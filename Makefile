@@ -3,13 +3,17 @@
 #   make test         — tier 1: fast pytest suite (slow marker deselected)
 #   make slow         — tier 2: the long end-to-end suite
 #   make check        — tier 0 then tier 1, the pre-commit sequence
+#   make report       — combined markdown+CSV table over every BENCH_*.json
 #   make resume-smoke — kill-and-resume bit-identity: a 2-round train run
 #                       vs the same run aborted after round 1 and resumed;
 #                       the final state checkpoints must be byte-identical
+#   make trace-smoke  — telemetry end-to-end: a tiny fault-injected train
+#                       run with --trace-dir, then a schema check over the
+#                       emitted trace.json / metrics.jsonl / manifest.json
 
 PY ?= python
 
-.PHONY: lint test slow check resume-smoke
+.PHONY: lint test slow check report resume-smoke trace-smoke
 
 lint:
 	$(PY) -m tools.reprolint src tests benchmarks examples
@@ -21,6 +25,9 @@ slow:
 	PYTHONPATH=src $(PY) -m pytest -m slow
 
 check: lint test
+
+report:
+	$(PY) -m tools.bench_report --csv BENCH_report.csv
 
 # tiny but REAL: static channel + erasures + crashes, so the resumed run
 # must also replay the fault stream exactly to pass the bitwise diff
@@ -37,3 +44,9 @@ resume-smoke:
 		--ckpt-dir /tmp/resume_smoke/killed --resume
 	$(PY) -m tools.ckpt_diff /tmp/resume_smoke/full/state \
 		/tmp/resume_smoke/killed/state
+
+trace-smoke:
+	rm -rf /tmp/trace_smoke
+	PYTHONPATH=src $(PY) -m repro.launch.train $(RESUME_ARGS) \
+		--trace-dir /tmp/trace_smoke
+	PYTHONPATH=src $(PY) tools/check_trace.py /tmp/trace_smoke

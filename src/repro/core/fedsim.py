@@ -22,6 +22,7 @@ per-client loop of the paper.
 
 from __future__ import annotations
 
+import time as _time
 from dataclasses import dataclass, field
 from functools import partial
 
@@ -118,7 +119,7 @@ class FedSim:
                  hcfg: HierarchyConfig, tcfg: TrainConfig, *,
                  batches_per_epoch: int = 5, seed: int = 0,
                  wireless: WirelessConfig | None = None,
-                 cut: str | None = None, codecs=None):
+                 cut: str | None = None, codecs=None, telemetry=None):
         assert data.num_clients == hcfg.num_clients
         self.cfg, self.data, self.h, self.t = cfg, data, hcfg, tcfg
         self.batches_per_epoch = batches_per_epoch
@@ -138,6 +139,11 @@ class FedSim:
         # joint (cut, codec) grid search is the controller's accounting-side
         # tool (see benchmarks/compress_sweep.py).
         self.codecs = codecs
+        # observability (repro.telemetry): FedSim registers its own
+        # fedsim.* instruments (round wall time, eval accuracy, live vs
+        # stale aggregation mass) next to the scheduler's sched.* ones.
+        # None (the default) skips every hook — bit-inert
+        self.telemetry = telemetry
         self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
@@ -168,12 +174,14 @@ class FedSim:
                 self.scheduler = make_scheduler(
                     wireless, hcfg.num_clients, kappa0=hcfg.kappa0,
                     comm_table=table, es_assign=es_assign,
-                    fixed_cut=self.cut if self.cut in table else 0)
+                    fixed_cut=self.cut if self.cut in table else 0,
+                    telemetry=telemetry)
             else:
                 comm = comm_for_cnn(cfg, cut=self.cut, **kw)
                 self.scheduler = make_scheduler(wireless, hcfg.num_clients,
                                                 comm, hcfg.kappa0,
-                                                es_assign=es_assign)
+                                                es_assign=es_assign,
+                                                telemetry=telemetry)
         self._edge_round = 0
         # staleness-weighted async edge aggregation (scheduler banks a
         # straggler's remainder; we snapshot its stacked params at the
@@ -501,8 +509,11 @@ class FedSim:
 
         sched = self.scheduler
         client_keys = self._client_keys
+        tel = self.telemetry
+        tel_on = tel is not None and getattr(tel, "enabled", False)
 
         for t2 in range(self._round, rounds):
+            t_wall = _time.perf_counter() if tel_on else 0.0
             round_losses = []
             es_any = np.zeros(self.B, bool)
             parts = []
@@ -568,6 +579,16 @@ class FedSim:
                             stale_w = np.where(
                                 deliv, lam ** rep.stale_delivered, 0.0)
                             stale_tree = self._stale_params
+                            if tel_on:
+                                # pre-normalization aggregation mass the
+                                # banked (discounted) updates contribute
+                                # next to the live participants'
+                                tel.metrics.counter(
+                                    "fedsim.agg_mass_stale").inc(
+                                    float(stale_w.sum()))
+                        if tel_on:
+                            tel.metrics.counter("fedsim.agg_mass_live").inc(
+                                float(np.asarray(rep.mask).sum()))
                             if rep.es_map is not None:
                                 es_any |= np.bincount(rep.es_map[deliv],
                                                       minlength=self.B) > 0
@@ -621,6 +642,10 @@ class FedSim:
             self._stacked = stacked
             self._round = t2 + 1
 
+            if tel_on:
+                tel.metrics.histogram("fedsim.round_wall_s").observe(
+                    _time.perf_counter() - t_wall)
+                tel.metrics.counter("fedsim.rounds").inc()
             if (t2 + 1) % log_every == 0 or t2 == rounds - 1:
                 gl, ga = self._weighted_eval(stacked, xt, yt, wt)
                 row = {"round": t2 + 1,
@@ -630,6 +655,12 @@ class FedSim:
                     row["mean_participants"] = float(np.mean(parts))
                     row["sim_time_s"] = res.total_sim_time_s
                 res.history.append(row)
+                if tel_on:
+                    tel.metrics.gauge("fedsim.train_loss").set(
+                        row["train_loss"])
+                    tel.metrics.gauge("fedsim.test_loss").set(gl)
+                    tel.metrics.gauge("fedsim.test_acc").set(ga)
+                    tel.flush(step=t2 + 1, force=True)
         res.global_params = jax.tree.map(lambda x: x[0], stacked)
         res.per_client_global = self._per_client_eval(stacked, xt, yt, wt)
         return res

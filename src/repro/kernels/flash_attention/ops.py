@@ -11,12 +11,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_hmajor
+from repro.telemetry.kernels import kernel_probe
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
-def flash_attention(q, k, v, causal: bool = True, window: int = 0,
-                    softcap: float = 0.0):
-    """q: (B,S,H,d); k,v: (B,S,KVH,d) — the model-zoo layout."""
+def _flash_attention_core(q, k, v, causal: bool = True, window: int = 0,
+                          softcap: float = 0.0):
     qh = jnp.swapaxes(q, 1, 2)
     kh = jnp.swapaxes(k, 1, 2)
     vh = jnp.swapaxes(v, 1, 2)
@@ -33,7 +33,7 @@ def _ref(q, k, v, causal, window, softcap):
 
 
 def _fwd(q, k, v, causal, window, softcap):
-    return flash_attention(q, k, v, causal, window, softcap), (q, k, v)
+    return _flash_attention_core(q, k, v, causal, window, softcap), (q, k, v)
 
 
 def _bwd(causal, window, softcap, res, g):
@@ -43,4 +43,19 @@ def _bwd(causal, window, softcap, res, g):
     return vjp(g)
 
 
-flash_attention.defvjp(_fwd, _bwd)
+_flash_attention_core.defvjp(_fwd, _bwd)
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    softcap: float = 0.0):
+    """q: (B,S,H,d); k,v: (B,S,KVH,d) — the model-zoo layout."""
+    probe = kernel_probe("flash_attention")
+    out = _flash_attention_core(q, k, v, causal, window, softcap)
+    if probe is not None:
+        B, S, H, d = q.shape
+        kv = min(window, S) if window else S
+        # QK^T and PV matmuls, 2 FLOPs/MAC; causal halves the rectangle
+        flops = 4.0 * B * H * S * kv * d * (0.5 if causal and not window
+                                            else 1.0)
+        probe.finish(out, flops=flops, arrays=(q, k, v))
+    return out

@@ -6,15 +6,16 @@ import jax
 
 from repro.kernels.mlstm_chunk.kernel import mlstm_chunk_pallas
 from repro.kernels.mlstm_chunk.ref import mlstm_ref
+from repro.telemetry.kernels import kernel_probe
 
 
 @jax.custom_vjp
-def mlstm_chunk(q, k, v, li, lf):
+def _mlstm_chunk_core(q, k, v, li, lf):
     return mlstm_chunk_pallas(q, k, v, li, lf)
 
 
 def _fwd(q, k, v, li, lf):
-    return mlstm_chunk(q, k, v, li, lf), (q, k, v, li, lf)
+    return _mlstm_chunk_core(q, k, v, li, lf), (q, k, v, li, lf)
 
 
 def _bwd(res, g):
@@ -22,4 +23,18 @@ def _bwd(res, g):
     return vjp(g)
 
 
-mlstm_chunk.defvjp(_fwd, _bwd)
+_mlstm_chunk_core.defvjp(_fwd, _bwd)
+
+
+def mlstm_chunk(q, k, v, li, lf):
+    probe = kernel_probe("mlstm_chunk")
+    out = _mlstm_chunk_core(q, k, v, li, lf)
+    if probe is not None:
+        *lead, S, d = q.shape
+        B = 1
+        for n in lead:
+            B *= n
+        # intra-chunk QK^T + PV (causal halves) at 2 FLOPs/MAC
+        probe.finish(out, flops=2.0 * B * S * S * d,
+                     arrays=(q, k, v, li, lf))
+    return out

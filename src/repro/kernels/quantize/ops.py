@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.kernels.quantize.kernel import LANES, quantize_dequantize_pallas
 from repro.kernels.quantize.ref import quantize_dequantize_ref
+from repro.telemetry.kernels import kernel_probe
 
 
 def tensor_scale(x, qmax: int):
@@ -52,6 +53,7 @@ def quantize_dequantize(x, key, *, bits: int = 8, stochastic: bool = True,
     ``stochastic=False``, which rounds half-up).  ``use_ref`` bypasses the
     Pallas kernel for the pure-jnp oracle (same math, same bits).
     """
+    probe = kernel_probe("quantize")
     qmax = 2 ** (bits - 1) - 1
     scale = tensor_scale(x, qmax)
     flat = x.reshape(-1)
@@ -60,15 +62,20 @@ def quantize_dequantize(x, key, *, bits: int = 8, stochastic: bool = True,
     else:
         u_flat = jnp.full(flat.shape, 0.5, jnp.float32)
     if use_ref:
-        return quantize_dequantize_ref(flat, u_flat, scale[0, 0],
-                                       qmax).reshape(x.shape)
-    n = flat.shape[0]
-    # big tensors amortize the grid over 256-row tiles; small ones keep the
-    # padding waste at one minimal (8, 128) tile
-    block_m = 256 if n >= 256 * LANES else 8
-    tile = block_m * LANES
-    pad = (-n) % tile
-    xp = jnp.pad(flat, (0, pad)).reshape(-1, LANES)
-    up = jnp.pad(u_flat, (0, pad)).reshape(-1, LANES)
-    out = _qdq_ste(xp, up, scale, qmax, interpret)
-    return out.reshape(-1)[:n].reshape(x.shape)
+        out = quantize_dequantize_ref(flat, u_flat, scale[0, 0],
+                                      qmax).reshape(x.shape)
+    else:
+        n = flat.shape[0]
+        # big tensors amortize the grid over 256-row tiles; small ones keep
+        # the padding waste at one minimal (8, 128) tile
+        block_m = 256 if n >= 256 * LANES else 8
+        tile = block_m * LANES
+        pad = (-n) % tile
+        xp = jnp.pad(flat, (0, pad)).reshape(-1, LANES)
+        up = jnp.pad(u_flat, (0, pad)).reshape(-1, LANES)
+        out = _qdq_ste(xp, up, scale, qmax, interpret)
+        out = out.reshape(-1)[:n].reshape(x.shape)
+    if probe is not None:
+        # scale + round + clip + dequant per element
+        probe.finish(out, flops=4.0 * x.size, arrays=(x,))
+    return out

@@ -2,22 +2,20 @@
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
-import jax.numpy as jnp
 
 from repro.kernels.rglru_scan.kernel import rglru_scan_pallas
 from repro.kernels.rglru_scan.ref import rglru_scan_ref
+from repro.telemetry.kernels import kernel_probe
 
 
 @jax.custom_vjp
-def rglru_scan(log_a, b, h0):
+def _rglru_scan_core(log_a, b, h0):
     return rglru_scan_pallas(log_a, b, h0)
 
 
 def _fwd(log_a, b, h0):
-    return rglru_scan(log_a, b, h0), (log_a, b, h0)
+    return _rglru_scan_core(log_a, b, h0), (log_a, b, h0)
 
 
 def _bwd(res, g):
@@ -26,4 +24,13 @@ def _bwd(res, g):
     return vjp(g)
 
 
-rglru_scan.defvjp(_fwd, _bwd)
+_rglru_scan_core.defvjp(_fwd, _bwd)
+
+
+def rglru_scan(log_a, b, h0):
+    probe = kernel_probe("rglru_scan")
+    out = _rglru_scan_core(log_a, b, h0)
+    if probe is not None:
+        # exp + multiply-accumulate per element of the scanned sequence
+        probe.finish(out, flops=3.0 * log_a.size, arrays=(log_a, b, h0))
+    return out

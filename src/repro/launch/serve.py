@@ -27,7 +27,7 @@ from repro.core import personalize_head_bank
 from repro.data.synthetic import synthetic_token_batch
 from repro.models import build_model
 from repro.models.layers import softcap
-from repro.utils.logging import MetricLogger
+from repro.telemetry import MetricLogger
 
 
 def main(argv=None):

@@ -35,7 +35,7 @@ from repro.core.comm import comm_for_lm, comm_table_for_lm
 from repro.data.synthetic import synthetic_token_batch
 from repro.launch.mesh import set_mesh
 from repro.models import build_model
-from repro.utils.logging import MetricLogger
+from repro.telemetry import MetricLogger, Telemetry
 from repro.wireless import make_scheduler
 
 
@@ -160,9 +160,24 @@ def main(argv=None):
                     help="override the uniform quantizer's bit width")
     ap.add_argument("--topk-frac", type=float, default=0.05,
                     help="kept fraction for --codec topk")
+    # ---- observability (repro.telemetry) ----
+    ap.add_argument("--trace-dir", default=None,
+                    help="write telemetry into this directory: a streamed "
+                         "Chrome/Perfetto trace of every wireless round "
+                         "(trace.json — open at https://ui.perfetto.dev), "
+                         "typed metrics snapshots (metrics.jsonl), a run "
+                         "manifest (manifest.json), and a run-end summary "
+                         "table (summary.txt).  Default: telemetry off, "
+                         "bit-identical to a run without it")
+    ap.add_argument("--metrics-every", type=int, default=1,
+                    help="flush a metrics.jsonl snapshot every N rounds "
+                         "(with --trace-dir)")
     args = ap.parse_args(argv)
 
-    log = MetricLogger("train")
+    tel = (Telemetry(args.trace_dir, metrics_every=args.metrics_every,
+                     kernels=True)
+           if args.trace_dir else Telemetry.disabled())
+    log = MetricLogger("train", telemetry=tel)
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
     C = args.clients
@@ -230,12 +245,16 @@ def main(argv=None):
                 wcfg, C, kappa0=hcfg.kappa0, comm_table=table,
                 es_assign=es_assign,
                 fixed_cut=cfg.n_client_layers
-                if cfg.n_client_layers in table else 0)
+                if cfg.n_client_layers in table else 0,
+                telemetry=tel)
         else:
             comm = comm_for_lm(cfg, **comm_kw)
             scheduler = make_scheduler(wcfg, C, comm, hcfg.kappa0,
-                                       es_assign=es_assign)
+                                       es_assign=es_assign, telemetry=tel)
     participation = scheduler is not None
+    tel.write_manifest(config=vars(args),
+                       seeds={"seed": args.seed},
+                       extra={"arch": args.arch, "clients": C})
 
     with set_mesh(mesh):
         if mesh.shape["data"] == C:
@@ -325,6 +344,7 @@ def main(argv=None):
             if args.abort_after is not None and r + 1 >= args.abort_after:
                 # simulated crash for the resume smoke test: die right
                 # after this round's checkpoint, skipping the final save
+                tel.close()
                 print(json.dumps({"aborted_after_round": r + 1}))
                 return
 
@@ -348,6 +368,7 @@ def main(argv=None):
             save_checkpoint(args.ckpt_dir, args.rounds, global_params)
             log.log(ckpt=1.0)
 
+    tel.close()
     out = {"final_loss": float(metrics["loss"]),
            "personalization_gain": gain}
     if scheduler is not None:

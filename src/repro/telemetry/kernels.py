@@ -1,0 +1,86 @@
+"""Pallas-kernel call instrumentation: count, wall time, bytes, FLOP/s.
+
+The four ``kernels/<name>/ops.py`` wrappers call :func:`kernel_probe` at
+entry.  With no sink installed (the default) the probe is ``None`` and the
+wrapper pays one module-global read — zero overhead, zero behavior change.
+With a sink (a :class:`repro.telemetry.metrics.MetricsRegistry`, installed
+by ``Telemetry(kernels=True)`` or :func:`set_kernel_sink`), each call
+records under ``kernel.<name>.*``:
+
+- ``calls`` / ``traced_calls`` — concrete executions vs jit-trace visits.
+  A wrapper invoked under ``jax.jit`` runs at TRACE time with abstract
+  values; there is no meaningful wall clock there, so traced visits are
+  only counted (the compiled executable's kernel launches are invisible to
+  Python — profile those with the roofline tools in ``launch.roofline``).
+- ``flops`` / ``bytes`` — nominal work per concrete call, from the
+  wrapper's own analytic estimate (the same arithmetic the roofline tables
+  use), accumulated as counters.
+- ``wall_s`` — a histogram of per-call wall time.  Timing a concrete call
+  blocks on the result (``block_until_ready``), which is exactly what an
+  eager benchmark wants and why the probe is opt-in.
+- ``gflops_per_s`` — a gauge of the LAST call's achieved rate
+  (``flops / wall``), the measured companion of the analytic roofline.
+"""
+
+from __future__ import annotations
+
+import time
+
+_SINK = None      # MetricsRegistry | None; None = instrumentation off
+
+
+def set_kernel_sink(registry) -> None:
+    """Install (or clear, with None) the global kernel metrics sink."""
+    global _SINK
+    _SINK = registry
+
+
+def get_kernel_sink():
+    return _SINK
+
+
+def _is_traced(arrays) -> bool:
+    from jax.core import Tracer
+    return any(isinstance(a, Tracer) for a in arrays)
+
+
+class _Probe:
+    __slots__ = ("name", "t0")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.t0 = time.perf_counter()
+
+    def finish(self, out, *, flops: float = 0.0, arrays=()) -> None:
+        """Record the call.  ``arrays`` are the operands + results whose
+        concreteness decides traced-vs-executed and whose ``nbytes`` sum
+        is the bytes-moved estimate."""
+        reg = _SINK
+        if reg is None:
+            return
+        leaves = [a for a in (*arrays, out) if a is not None]
+        base = f"kernel.{self.name}"
+        if _is_traced(leaves):
+            reg.counter(f"{base}.traced_calls").inc()
+            return
+        try:
+            import jax
+            jax.block_until_ready(out)
+        except Exception:
+            pass
+        wall = time.perf_counter() - self.t0
+        nbytes = float(sum(getattr(a, "nbytes", 0) for a in leaves))
+        reg.counter(f"{base}.calls").inc()
+        reg.counter(f"{base}.flops").inc(max(float(flops), 0.0))
+        reg.counter(f"{base}.bytes").inc(nbytes)
+        reg.histogram(f"{base}.wall_s").observe(wall)
+        if wall > 0.0 and flops > 0.0:
+            reg.gauge(f"{base}.gflops_per_s").set(flops / wall / 1e9)
+
+
+def kernel_probe(name: str):
+    """Start a probe for one wrapper call; None when instrumentation is
+    off (callers guard their single ``finish`` on that)."""
+    if _SINK is None:
+        return None
+    return _Probe(name)

@@ -1,26 +1,13 @@
-"""Tiny structured logger (stdout, no deps)."""
+"""Back-compat shim: MetricLogger moved to ``repro.telemetry.sinks``.
+
+The logger now preserves JSON-native value types (the old version coerced
+every non-float through ``str``) and can mirror numeric values into a
+:class:`repro.telemetry.Telemetry` metrics registry.  Import from
+``repro.telemetry`` in new code.
+"""
 
 from __future__ import annotations
 
-import json
-import sys
-import time
+from repro.telemetry.sinks import MetricLogger, json_safe
 
-
-class MetricLogger:
-    def __init__(self, name: str = "repro", stream=None):
-        self.name = name
-        self.stream = stream or sys.stdout
-        self._t0 = time.time()
-
-    def log(self, step: int | None = None, **metrics):
-        rec = {"t": round(time.time() - self._t0, 3)}
-        if step is not None:
-            rec["step"] = step
-        for k, v in metrics.items():
-            try:
-                rec[k] = float(v)
-            except (TypeError, ValueError):
-                rec[k] = str(v)
-        print(f"[{self.name}] " + json.dumps(rec), file=self.stream, flush=True)
-        return rec
+__all__ = ["MetricLogger", "json_safe"]

@@ -168,6 +168,24 @@ Participation (``repro.wireless.scheduler.ParticipationScheduler``):
   discarded.
 - ``seed``: RNG seed for fading draws, heterogeneity, and thinning.
 
+Observability (``repro.telemetry``):
+
+- ``make_scheduler(..., telemetry=)`` / ``ParticipationScheduler(...,
+  telemetry=)`` / ``FedSim(..., telemetry=)`` accept a
+  :class:`repro.telemetry.Telemetry` handle.  When enabled, every
+  ``step()`` exports the round's :class:`RoundTimeline` — compute chunks,
+  uplink payloads with their individual HARQ retransmission attempts,
+  downlink, crash instants, ES outage spans — as Chrome/Perfetto trace
+  events (one track per client and per ES; open the file at
+  https://ui.perfetto.dev), and updates a typed metrics registry
+  (participation, withdrawals/backfills, goodput vs retransmit bits,
+  stale-bank depth/age, per-phase energy) flushed as JSONL.
+  ``launch/train.py --trace-dir OUT`` wires all of it plus a run manifest.
+- The default (``telemetry=None``) is the OFF state and is bit-inert: the
+  hooks read the report and timeline, never scheduler state, draw no RNG,
+  and are skipped entirely — the golden regressions and the
+  ``telemetry-off-default`` reprolint rule pin this.
+
 Aggregation semantics under a partial mask: participating clients keep
 their Eq. 4/6 weights, renormalized to sum to 1; an edge round with ZERO
 participants keeps the previous edge model; with a full (all-ones) mask
@@ -196,7 +214,8 @@ __all__ = [
 
 
 def make_scheduler(cfg, num_clients: int, comm=None, kappa0: int = 1, *,
-                   comm_table=None, es_assign=None, fixed_cut=0):
+                   comm_table=None, es_assign=None, fixed_cut=0,
+                   telemetry=None):
     """Convenience: CommModel byte accounting -> channel -> scheduler.
 
     Pass either one ``comm`` (a single fixed cut, the original behavior) or
@@ -207,6 +226,8 @@ def make_scheduler(cfg, num_clients: int, comm=None, kappa0: int = 1, *,
     shared-uplink contention (default: all clients on one ES).  A
     :class:`DeviceModel` built from the same config prices client compute
     alongside the bits (free when ``compute_gflops`` is inf).
+    ``telemetry`` (a :class:`repro.telemetry.Telemetry`, default off) makes
+    the scheduler record every round's trace and metrics.
     """
     channel = ChannelModel(cfg, num_clients)
     device = DeviceModel(cfg, num_clients)
@@ -226,9 +247,11 @@ def make_scheduler(cfg, num_clients: int, comm=None, kappa0: int = 1, *,
             pipeline=cfg.pipeline, expected_attempts=ea,
             harq_backoff_s=backoff)
         return ParticipationScheduler(cfg, channel, cutter=cutter,
-                                      es_assign=es_assign, device=device)
+                                      es_assign=es_assign, device=device,
+                                      telemetry=telemetry)
     bits = client_round_bits(comm, kappa0)
     flops = client_round_flops(
         comm, kappa0, codec_cycles_per_element=cfg.codec_cycles_per_element)
     return ParticipationScheduler(cfg, channel, bits, es_assign=es_assign,
-                                  device=device, flops=flops)
+                                  device=device, flops=flops,
+                                  telemetry=telemetry)

@@ -278,7 +278,8 @@ class ParticipationScheduler:
     def __init__(self, cfg: WirelessConfig, channel: ChannelModel,
                  bits: RoundBits | None = None, *, cutter=None,
                  es_assign: np.ndarray | None = None,
-                 device: DeviceModel | None = None, flops: float = 0.0):
+                 device: DeviceModel | None = None, flops: float = 0.0,
+                 telemetry=None):
         if cfg.selection not in ("deadline", "topk", "random"):
             raise ValueError(f"unknown selection policy {cfg.selection!r}")
         if (bits is None) == (cutter is None):
@@ -319,6 +320,12 @@ class ParticipationScheduler:
                 int(self.es_assign.max()) + 1, cfg.seed)
         self._plan = None                  # this round's FaultPlan (or None)
         self._es_eff = self.es_assign      # effective ES map after failover
+        # observability (repro.telemetry): a purely-read-only observer of
+        # each round's report + timeline.  None (the default, enforced by
+        # reprolint's telemetry-off-default) skips every hook — no file
+        # I/O, no RNG, no arithmetic on scheduler state
+        self.telemetry = telemetry
+        self.last_timeline = None          # the most recent step's timeline
 
     def _bits_cuts(self, up_bps, down_bps, latency_s):
         """Cut decision (or the fixed bits) at the given rates."""
@@ -438,6 +445,7 @@ class ParticipationScheduler:
         (link, bits, cuts, comp_s, tl, scheduled, withdrawn,
          contended) = self._contend(private, scheduled, bits, cuts, comp_s,
                                     tl)
+        n_backfilled = 0
         if (contended and cfg.selection == "topk" and cfg.topk > 0
                 and int(scheduled.sum()) < cfg.topk):
             # topk BACKFILL (single pass, see module docstring): promote the
@@ -453,6 +461,7 @@ class ParticipationScheduler:
                     (link, bits, cuts, comp_s, tl, scheduled, withdrawn,
                      _) = self._contend(private, scheduled | extra, bits0,
                                         cuts0, comp0, tl0)
+                    n_backfilled = int((scheduled & extra).sum())
         times = tl.times_s
         charge = tl.charge_j(cfg.tx_power_w, cfg.compute_power_w)
 
@@ -571,21 +580,35 @@ class ParticipationScheduler:
                   if es_down is not None
                   and not np.array_equal(self._es_eff, self.es_assign)
                   else None)
-        return RoundReport(round_idx=round_idx, mask=alive.astype(np.float64),
-                           times_s=times, round_time_s=round_time,
-                           energy_left_j=self.energy_left.copy(),
-                           scheduled=scheduled.copy(), cuts=rep_cuts,
-                           uplink_bps=np.asarray(link.uplink_bps).copy(),
-                           codecs=rep_codecs, bits_tx=bits_tx,
-                           compute_s=np.asarray(comp_s, float).copy(),
-                           compute_j=compute_j, stale_banked=stale_banked,
-                           stale_delivered=stale_delivered,
-                           stale_dropped=stale_dropped,
-                           crashed=crashed, failed=failed,
-                           down_failed=down_failed,
-                           es_down=None if es_down is None
-                           else es_down.copy(),
-                           es_map=es_map, retx_bits=retx_bits, retx_j=retx_j)
+        rep = RoundReport(round_idx=round_idx, mask=alive.astype(np.float64),
+                          times_s=times, round_time_s=round_time,
+                          energy_left_j=self.energy_left.copy(),
+                          scheduled=scheduled.copy(), cuts=rep_cuts,
+                          uplink_bps=np.asarray(link.uplink_bps).copy(),
+                          codecs=rep_codecs, bits_tx=bits_tx,
+                          compute_s=np.asarray(comp_s, float).copy(),
+                          compute_j=compute_j, stale_banked=stale_banked,
+                          stale_delivered=stale_delivered,
+                          stale_dropped=stale_dropped,
+                          crashed=crashed, failed=failed,
+                          down_failed=down_failed,
+                          es_down=None if es_down is None
+                          else es_down.copy(),
+                          es_map=es_map, retx_bits=retx_bits, retx_j=retx_j)
+        self.last_timeline = tl
+        tel = self.telemetry
+        if tel is not None and getattr(tel, "enabled", False):
+            has_bank = self._stale_age >= 0
+            tel.record_round(
+                rep, tl, es_assign=self._es_eff,
+                deadline_s=float(cfg.deadline_s),
+                withdrawn=int(withdrawn.sum()),
+                backfilled=n_backfilled,
+                tx_j=float(cfg.tx_power_w * tl.tx_charged_s[scheduled].sum()),
+                bank_depth=int(has_bank.sum()),
+                bank_age_max=(int(self._stale_age[has_bank].max())
+                              if has_bank.any() else 0))
+        return rep
 
     def _stale_update(self, private: LinkState, scheduled, alive, up,
                       moved_up, round_time: float, *, push_ok=None,

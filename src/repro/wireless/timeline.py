@@ -111,6 +111,11 @@ class RoundTimeline:
     #                                only (tx_charged_s minus this prices
     #                                the retransmission overhead)
     first_down_s: np.ndarray = None  # (U,) capped first-attempt downlink s
+    tx_payload: np.ndarray = None  # (m,) payload index of each uplink
+    #                                column (attempt-expanded fault rounds
+    #                                have several columns per payload)
+    tx_attempt: np.ndarray = None  # (m,) HARQ attempt index per column
+    #                                (0 = first transmission, >0 = retx)
 
     def charge_j(self, tx_power_w: float, compute_power_w: float):
         """Deadline-capped joules: what a scheduled client actually pays."""
@@ -289,6 +294,7 @@ def _faulty(link, bits, comp_s, deadline_s, U, plan, pipeline):
     # expand payloads into attempt segments; the radio is strictly serial
     radio = np.zeros(U)
     tx_starts, tx_ends, tx_bits_cols, first_cols = [], [], [], []
+    payload_ids, attempt_ids = [], []
     for i in range(m):
         a = plan.up_attempts[:, i]
         for j in range(int(a.max())):
@@ -301,6 +307,8 @@ def _faulty(link, bits, comp_s, deadline_s, U, plan, pipeline):
             tx_ends.append(end)
             tx_bits_cols.append(np.where(live, pay_bits[:, i], 0.0))
             first_cols.append(j == 0)
+            payload_ids.append(i)
+            attempt_ids.append(j)
             radio = end
     up_finish = radio                       # all uplink attempts done
     tx_start = np.stack(tx_starts, axis=1)
@@ -377,4 +385,6 @@ def _faulty(link, bits, comp_s, deadline_s, U, plan, pipeline):
         up_done=up_done, down_done=down_done,
         air_up_bits=air_up, air_down_bits=air_down,
         goodput_up_bits=goodput_up,
-        first_tx_s=first_tx_s, first_down_s=first_down_s)
+        first_tx_s=first_tx_s, first_down_s=first_down_s,
+        tx_payload=np.asarray(payload_ids, int),
+        tx_attempt=np.asarray(attempt_ids, int))

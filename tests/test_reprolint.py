@@ -185,6 +185,34 @@ class TestAstCheckers:
                 failover: str = "reassoc"
         """)
 
+    def test_telemetry_required_flagged(self):
+        # a required telemetry handle makes observability load-bearing
+        assert "telemetry-off-default" in _rules("""
+            def make_scheduler(cfg, telemetry):
+                return telemetry
+        """)
+
+    def test_telemetry_default_enabled_flagged(self):
+        # defaulting to a LIVE handle would run the goldens instrumented
+        assert "telemetry-off-default" in _rules("""
+            from repro.telemetry import Telemetry
+            def run(rounds, *, telemetry=Telemetry("/tmp/t")):
+                return rounds
+        """)
+
+    def test_telemetry_off_defaults_clean(self):
+        # None and the canonical disabled() handle are both the OFF state;
+        # unrelated parameters are free
+        assert not _rules("""
+            from repro.telemetry import Telemetry
+            def make_scheduler(cfg, telemetry=None):
+                return cfg
+            def run(rounds, *, telemetry=Telemetry.disabled()):
+                return rounds
+            def other(telemetry_dir="/tmp"):
+                return telemetry_dir
+        """)
+
 
 # ----------------------------------------------------------- suppressions
 class TestSuppressions:

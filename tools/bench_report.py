@@ -1,0 +1,180 @@
+"""Benchmark trajectory report: every BENCH_*.json as one table.
+
+The sweep drivers under ``benchmarks/`` each leave a ``BENCH_<name>.json``
+in the repo root — a JSON list of row dicts whose schemas drifted as the
+sweeps grew (``mode`` vs ``policy`` labels, ``total_bits`` vs ``bits`` vs
+``bits_tx``, scalar counts vs per-client lists).  This tool loads them
+all, validates and NORMALIZES every row to one schema, and renders the
+combined trajectory as markdown (stdout or ``--markdown``) and/or CSV
+(``--csv``) — the "did this PR move the numbers" view across every sweep
+at once.
+
+Malformed records (a non-list file, a non-dict row, a non-numeric metric)
+are an ERROR, not a skip: a benchmark file that stopped parsing is a
+regression this report exists to catch.
+
+    python -m tools.bench_report                 # markdown to stdout
+    python -m tools.bench_report --csv report.csv --markdown report.md
+    make report
+"""
+
+from __future__ import annotations
+
+import argparse
+import csv
+import glob
+import json
+import os
+import sys
+
+# the unified row schema, in column order
+COLUMNS = ["source", "label", "participation_rate",
+           "effective_participation_rate", "mean_round_time_s",
+           "total_bits", "retx_bits", "failed", "crashed", "stale_delivered",
+           "final_loss", "final_acc", "total_sim_time_s"]
+
+# metric keys that must be numeric when present (post-normalization)
+_NUMERIC = COLUMNS[2:]
+
+
+class MalformedRecord(ValueError):
+    """A BENCH_*.json record that does not normalize to the schema."""
+
+
+def _count(v):
+    """Unify scalar counts with per-client lists/masks (sum of truthiness)."""
+    if isinstance(v, (list, tuple)):
+        return int(sum(1 for x in v if x))
+    return v
+
+
+def _num(v, key, where):
+    if isinstance(v, bool) or not isinstance(v, (int, float)):
+        raise MalformedRecord(f"{where}: {key!r} is {type(v).__name__} "
+                              f"{v!r}, expected a number")
+    return float(v)
+
+
+def _label(row) -> str:
+    """The row's sweep point: mode, policy (+erasure), or any name-ish key."""
+    if "mode" in row:
+        return str(row["mode"])
+    if "policy" in row:
+        lab = str(row["policy"])
+        if "erasure_prob" in row:
+            lab += f" @ p={row['erasure_prob']}"
+        return lab
+    for k in ("name", "label", "arch", "codec", "cut"):
+        if k in row:
+            return str(row[k])
+    return "?"
+
+
+def normalize_row(row: dict, source: str, idx: int) -> dict:
+    """One drifted sweep row -> the unified schema (raises MalformedRecord).
+
+    Unifications: ``total_bits``/``bits``/``bits_tx`` -> ``total_bits``;
+    per-client list counts (``failed``/``crashed``/``stale_delivered``) ->
+    scalar counts; absent metrics -> None (rendered blank).
+    """
+    where = f"{source}[{idx}]"
+    if not isinstance(row, dict):
+        raise MalformedRecord(f"{where}: row is {type(row).__name__}, "
+                              f"expected an object")
+    out = {"source": source, "label": _label(row)}
+    bits = row.get("total_bits", row.get("bits", row.get("bits_tx")))
+    unified = {"total_bits": bits,
+               "failed": _count(row.get("failed")) if "failed" in row
+               else None,
+               "crashed": _count(row.get("crashed")) if "crashed" in row
+               else None,
+               "stale_delivered": _count(row.get("stale_delivered"))
+               if "stale_delivered" in row
+               else row.get("stale_delivered_per_round")}
+    for key in _NUMERIC:
+        v = unified.get(key, row.get(key)) if key in unified \
+            else row.get(key)
+        out[key] = None if v is None else _num(v, key, where)
+    return out
+
+
+def load_bench(path: str) -> list[dict]:
+    """One BENCH_*.json -> normalized rows (raises MalformedRecord)."""
+    source = os.path.basename(path)
+    if source.startswith("BENCH_"):
+        source = source[len("BENCH_"):]
+    source = source.rsplit(".", 1)[0]
+    try:
+        with open(path) as fh:
+            records = json.load(fh)
+    except json.JSONDecodeError as e:
+        raise MalformedRecord(f"{path}: not valid JSON ({e})") from e
+    if not isinstance(records, list):
+        raise MalformedRecord(f"{path}: top level is "
+                              f"{type(records).__name__}, expected a list")
+    return [normalize_row(r, source, i) for i, r in enumerate(records)]
+
+
+def load_all(root: str) -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
+        rows.extend(load_bench(path))
+    return rows
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return ""
+    if isinstance(v, float):
+        if v == int(v) and abs(v) < 1e15:
+            return str(int(v))
+        return f"{v:.6g}"
+    return str(v)
+
+
+def to_markdown(rows: list[dict]) -> str:
+    head = "| " + " | ".join(COLUMNS) + " |"
+    sep = "|" + "|".join("---" for _ in COLUMNS) + "|"
+    body = ["| " + " | ".join(_fmt(r[c]) for c in COLUMNS) + " |"
+            for r in rows]
+    return "\n".join([head, sep] + body)
+
+
+def write_csv(rows: list[dict], fh) -> None:
+    w = csv.DictWriter(fh, fieldnames=COLUMNS)
+    w.writeheader()
+    for r in rows:
+        w.writerow({c: "" if r[c] is None else r[c] for c in COLUMNS})
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dir", default=".",
+                    help="directory holding the BENCH_*.json files")
+    ap.add_argument("--csv", default=None, help="also write CSV here")
+    ap.add_argument("--markdown", default=None,
+                    help="write markdown here instead of stdout")
+    args = ap.parse_args(argv)
+    try:
+        rows = load_all(args.dir)
+    except MalformedRecord as e:
+        print(f"bench_report: {e}", file=sys.stderr)
+        return 1
+    if not rows:
+        print(f"bench_report: no BENCH_*.json under {args.dir}",
+              file=sys.stderr)
+        return 1
+    md = to_markdown(rows)
+    if args.markdown:
+        with open(args.markdown, "w") as fh:
+            fh.write(md + "\n")
+    else:
+        print(md)
+    if args.csv:
+        with open(args.csv, "w", newline="") as fh:
+            write_csv(rows, fh)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,123 @@
+"""Schema check for a telemetry output directory (the trace-smoke gate).
+
+Usage::
+
+    python tools/check_trace.py <dir>
+
+Validates the three files a ``--trace-dir`` run emits:
+
+- ``trace.json``   — Trace Event JSON Array Format: parses (with the
+  optional trailing ``]`` restored if the run died mid-stream), every
+  event carries ph/pid/name, ``ts``/``dur`` are non-negative and finite,
+  the M-metadata names the three fixed tracks, and at least one round
+  marker and one client-track X event exist;
+- ``metrics.jsonl`` — one ``{"step": ..., "metrics": {...}}`` record per
+  line, every instrument self-describing (``kind`` in counter/gauge/
+  histogram with the matching state fields);
+- ``manifest.json`` — run provenance: config_hash/seeds/python/platform.
+
+Exit status 0 iff everything holds; prints one line per problem.
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+from pathlib import Path
+
+_KIND_FIELDS = {"counter": {"value"}, "gauge": {"value"},
+                "histogram": {"count", "sum", "bounds", "bucket_counts"}}
+
+
+def check_trace(path: Path, problems: list) -> None:
+    text = path.read_text()
+    try:
+        evs = json.loads(text)
+    except json.JSONDecodeError:
+        try:
+            evs = json.loads(text.rstrip().rstrip(",") + "]")
+        except json.JSONDecodeError as e:
+            problems.append(f"{path}: unparseable even with ']' fixup: {e}")
+            return
+    if not isinstance(evs, list) or not evs:
+        problems.append(f"{path}: expected a non-empty event array")
+        return
+    for i, ev in enumerate(evs):
+        for k in ("ph", "pid", "name"):
+            if k not in ev:
+                problems.append(f"{path}: event {i} missing {k!r}: {ev}")
+                return
+        for k in ("ts", "dur"):
+            v = ev.get(k)
+            if v is not None and (not isinstance(v, (int, float))
+                                  or not math.isfinite(v) or v < 0):
+                problems.append(f"{path}: event {i} bad {k}={v!r}")
+    tracks = {ev["args"]["name"] for ev in evs if ev["ph"] == "M"
+              and ev.get("name") == "process_name"}
+    for want in ("round markers", "clients", "edge servers"):
+        if want not in tracks:
+            problems.append(f"{path}: no process_name metadata for {want!r}")
+    if not any(ev["ph"] == "i" and ev["pid"] == 0
+               and ev["name"].startswith("round ") for ev in evs):
+        problems.append(f"{path}: no round marker instants")
+    if not any(ev["ph"] == "X" and ev["pid"] == 1 for ev in evs):
+        problems.append(f"{path}: no client-track X events")
+
+
+def check_metrics(path: Path, problems: list) -> None:
+    lines = path.read_text().splitlines()
+    if not lines:
+        problems.append(f"{path}: empty")
+        return
+    for n, line in enumerate(lines, start=1):
+        try:
+            rec = json.loads(line)
+        except json.JSONDecodeError as e:
+            problems.append(f"{path}:{n}: bad JSON: {e}")
+            continue
+        if "step" not in rec or "metrics" not in rec:
+            problems.append(f"{path}:{n}: record missing step/metrics")
+            continue
+        for name, inst in rec["metrics"].items():
+            kind = inst.get("kind")
+            want = _KIND_FIELDS.get(kind)
+            if want is None:
+                problems.append(f"{path}:{n}: {name}: unknown kind {kind!r}")
+            elif not want <= set(inst):
+                problems.append(f"{path}:{n}: {name}: {kind} missing "
+                                f"{sorted(want - set(inst))}")
+
+
+def check_manifest(path: Path, problems: list) -> None:
+    man = json.loads(path.read_text())
+    for k in ("config_hash", "seeds", "python", "platform"):
+        if k not in man:
+            problems.append(f"{path}: missing key {k!r}")
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if len(argv) != 1:
+        print(__doc__.strip().splitlines()[0])
+        print(f"usage: {Path(sys.argv[0]).name} <telemetry-dir>")
+        return 2
+    root = Path(argv[0])
+    problems: list = []
+    checks = {"trace.json": check_trace, "metrics.jsonl": check_metrics,
+              "manifest.json": check_manifest}
+    for name, fn in checks.items():
+        p = root / name
+        if not p.exists():
+            problems.append(f"{p}: missing")
+        else:
+            fn(p, problems)
+    for msg in problems:
+        print(msg)
+    if not problems:
+        print(f"ok: {', '.join(checks)} in {root} all well-formed")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

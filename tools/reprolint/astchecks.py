@@ -29,6 +29,10 @@ Rules (see engine.RULES / README.md):
   ``es_outage_trace``) default to anything but zero/empty.  The whole
   fault subsystem's bit-identity story rests on ``FaultConfig()`` meaning
   "no faults"; a default-on hazard would silently fork every golden.
+- ``telemetry-off-default`` — a ``telemetry`` parameter that is required
+  or defaults to an enabled value.  Observability (``repro.telemetry``)
+  must be strictly opt-in: the all-defaults call of every instrumented
+  entry point has to be bit-inert, or the goldens run instrumented.
 """
 
 from __future__ import annotations
@@ -75,6 +79,7 @@ def check_source(source: str, path: str) -> list[Finding]:
     out += _check_mutable_default(tree, path)
     out += _check_float64(tree, path)
     out += _check_fault_free_default(tree, path)
+    out += _check_telemetry_off_default(tree, path)
     return out
 
 
@@ -522,4 +527,50 @@ def _check_fault_free_default(tree: ast.Module, path: str) -> list[Finding]:
                     f"hazard: the all-defaults config must encode zero "
                     f"faults (expected {want}) or every fault-free golden "
                     f"regression silently forks"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# telemetry-off-default
+# ---------------------------------------------------------------------------
+def _is_off_default(node: ast.AST) -> bool:
+    """None, or the canonical OFF handle Telemetry.disabled()."""
+    if isinstance(node, ast.Constant) and node.value is None:
+        return True
+    if isinstance(node, ast.Call):
+        chain = _attr_chain(node.func)
+        return chain[-2:] == ["Telemetry", "disabled"]
+    return False
+
+
+def _check_telemetry_off_default(tree: ast.Module, path: str) -> list[Finding]:
+    """Every ``telemetry`` parameter must default to the OFF state.
+
+    Observability is strictly opt-in: a function that REQUIRES a telemetry
+    handle, or defaults it to an enabled instance, makes instrumentation a
+    load-bearing input — and the bit-identity goldens run with it absent.
+    ``telemetry=None`` (or ``Telemetry.disabled()``) is the contract."""
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        a = node.args
+        pos = a.posonlyargs + a.args
+        pos_defaults = ([None] * (len(pos) - len(a.defaults))
+                        + list(a.defaults))
+        for arg, default in (list(zip(pos, pos_defaults))
+                             + list(zip(a.kwonlyargs, a.kw_defaults))):
+            if arg.arg != "telemetry":
+                continue
+            if default is None:
+                out.append(Finding(
+                    "telemetry-off-default", path, node.lineno,
+                    f"{node.name}() requires 'telemetry': observability "
+                    f"must be opt-in — default it to None"))
+            elif not _is_off_default(default):
+                out.append(Finding(
+                    "telemetry-off-default", path, node.lineno,
+                    f"{node.name}() defaults 'telemetry' to an enabled "
+                    f"value: the all-defaults call must be bit-inert "
+                    f"(default to None or Telemetry.disabled())"))
     return out

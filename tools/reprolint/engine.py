@@ -43,6 +43,9 @@ RULES: dict[str, Rule] = {r.id: r for r in (
     Rule("fault-free-default", "a FaultConfig hazard field defaults to a "
          "non-zero value (a default-on fault would break the fault-free "
          "bit-identity goldens)", "ast"),
+    Rule("telemetry-off-default", "a 'telemetry' parameter is required or "
+         "defaults to an enabled value (observability must be opt-in: "
+         "telemetry=None keeps instrumented code bit-inert)", "ast"),
     # --- layer 2: Pallas kernel contracts --------------------------------
     Rule("pallas-triplet", "a kernels/<name>/ package is missing one of "
          "kernel.py / ref.py / ops.py", "pallas"),
