@@ -1,0 +1,145 @@
+"""Population-scale scheduling wall time: 10**3 -> 10**6 registered clients.
+
+The cohort refactor (``repro.wireless.population``) rewrote the per-round
+decision path as two fused jit stages over struct-of-arrays client state,
+with per-round cohort sampling and k-means ES placement on top.  This
+bench measures what that bought: for each population size it registers N
+clients, builds a :class:`CohortScheduler` on a contended Rayleigh
+scenario (8 edge servers, k-means placement, energy budgets, deadline),
+and times scheduled rounds — the BUILD cost, the first round (jit
+compile), and the steady-state mean — while the whole registry's channel,
+energy, and participation state advances every round.
+
+The acceptance bar of the population ISSUE, checked in-run at full scale:
+a 10**6-client round schedules in single-digit SECONDS on one CPU
+(steady-state, compile excluded).
+
+``--dry-run`` shrinks the population list to its sub-10**4 prefix —
+seconds, not minutes; the tier-1 smoke test and CI invoke this mode so
+the benchmark cannot rot.
+
+    PYTHONPATH=src python benchmarks/cohort_bench.py \
+        [--populations 1000 10000 100000 1000000] [--cohort-size 512] \
+        [--rounds 5] [--sampling pareto] [--dry-run] [--out BENCH.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from repro.configs.base import WirelessConfig
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.core.comm import comm_for_cnn
+from repro.wireless.population import Population, make_cohort_scheduler
+
+NUM_ES = 8
+
+
+def _wireless(channel: str, seed: int) -> WirelessConfig:
+    """A deliberately busy scenario: contended shared uplinks, per-client
+    fading, finite energy, a binding deadline — every gate and the
+    conditional reshare stay live at all N."""
+    return WirelessConfig(model=channel, mean_uplink_mbps=25.0,
+                          mean_downlink_mbps=100.0, latency_s=0.01,
+                          deadline_s=2.0, energy_budget_j=500.0,
+                          tx_power_w=0.7, heterogeneity=0.5,
+                          es_uplink_mbps=800.0, contention="proportional",
+                          seed=seed)
+
+
+def bench_one(population: int, *, cohort_size: int, rounds: int,
+              channel: str, sampling: str, seed: int,
+              dry_run: bool = False) -> dict:
+    """Register ``population`` clients, schedule ``rounds + 1`` rounds,
+    report build / compile / steady-state wall times."""
+    comm = comm_for_cnn(CNN_CFG, dataset_size=400, batch_size=16,
+                        batches_per_epoch=1)
+    k = min(cohort_size, population)
+
+    t0 = time.perf_counter()
+    pop = Population(population, num_es=NUM_ES, seed=seed,
+                     assignment="kmeans")
+    sched = make_cohort_scheduler(_wireless(channel, seed), population,
+                                  comm, 1, population=pop, cohort_size=k,
+                                  sampling=sampling)
+    build_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    rep = sched.step(0)                      # jit compile + first round
+    warmup_s = time.perf_counter() - t0
+    parts = [rep.num_participants]
+    steady = []
+    for r in range(1, rounds + 1):
+        t0 = time.perf_counter()
+        rep = sched.step(r)
+        steady.append(time.perf_counter() - t0)
+        parts.append(rep.num_participants)
+    row = {"name": f"N={population}", "population": population,
+           "cohort_size": k, "rounds": rounds,
+           "participation_rate": float(np.mean(parts)) / k,
+           "build_s": round(build_s, 4),
+           "warmup_s": round(warmup_s, 4),
+           "wall_s_per_round": round(float(np.mean(steady)), 4),
+           "wall_s_per_round_max": round(float(np.max(steady)), 4)}
+    if dry_run:
+        row["dry_run"] = True
+    return row
+
+
+def check_acceptance(table) -> bool:
+    """The largest measured population schedules a steady-state round in
+    single-digit seconds on CPU."""
+    biggest = max(table, key=lambda r: r["population"])
+    wall = biggest["wall_s_per_round"]
+    good = wall < 10.0
+    print(f"[{'OK ' if good else 'FAIL'}] N={biggest['population']} "
+          f"steady-state round {wall:.3f}s < 10s")
+    return good
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--populations", type=int, nargs="+",
+                    default=[1000, 10000, 100000, 1000000],
+                    help="registered-client counts to sweep")
+    ap.add_argument("--cohort-size", type=int, default=512,
+                    help="clients sampled (and scheduled at gate 1) per "
+                         "round; capped at the population size")
+    ap.add_argument("--rounds", type=int, default=5,
+                    help="steady-state rounds timed per population (one "
+                         "extra warmup round pays the jit compile)")
+    ap.add_argument("--channels", default="rayleigh", dest="channel",
+                    choices=["static", "rayleigh"],
+                    help="per-client channel model")
+    ap.add_argument("--sampling", default="pareto",
+                    choices=list(Population.SAMPLING),
+                    help="cohort sampling rule")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--dry-run", action="store_true",
+                    help="sub-10**4 populations only: seconds, no files")
+    ap.add_argument("--out", default=None, help="also write JSON here")
+    args = ap.parse_args(argv)
+
+    pops = sorted(set(args.populations))
+    if args.dry_run:
+        pops = [p for p in pops if p < 10_000] or [min(pops)]
+    table = [bench_one(p, cohort_size=args.cohort_size, rounds=args.rounds,
+                       channel=args.channel, sampling=args.sampling,
+                       seed=args.seed, dry_run=args.dry_run) for p in pops]
+    print(json.dumps(table, indent=2))
+    ok = check_acceptance(table)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(table, f, indent=2)
+    if not ok:
+        raise SystemExit("ACCEPTANCE FAILED: population-scale round over "
+                         "the single-digit-seconds bar")
+    return table
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,7 @@ from repro.configs.sweeps import (sweep_hierarchy, sweep_train,
                                   sweep_wireless)
 from repro.core.comm import comm_for_cnn
 from repro.core.fedsim import FedSim
+from repro.core.hierarchy import es_assignment
 from repro.data.synthetic import make_federated_image_data
 from repro.wireless import make_scheduler
 
@@ -110,7 +111,7 @@ def dry_run_one(codec: str, channel: str, *, deadline: float, rounds: int,
         _wireless(channel, deadline=deadline, es_uplink_mbps=es_uplink_mbps,
                   energy_budget=energy_budget, seed=seed),
         h.num_clients, comm, h.kappa0,
-        es_assign=np.arange(h.num_clients) // h.clients_per_es)
+        es_assign=es_assignment(h.num_clients, h.clients_per_es))
     network = [sched.step(r).to_json_dict()
                for r in range(rounds * h.kappa1)]
     return _summarize(codec, channel, network, h,

@@ -36,6 +36,7 @@ from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
 from repro.configs.sweeps import sweep_hierarchy, sweep_train, sweep_wireless
 from repro.core.comm import comm_table_for_cnn
 from repro.core.fedsim import FedSim
+from repro.core.hierarchy import es_assignment
 from repro.data.synthetic import make_federated_image_data
 from repro.models.cnn import CUT_CANDIDATES
 from repro.wireless import make_scheduler
@@ -120,7 +121,7 @@ def dry_run_one(policy: str, sigma: float, *, rounds: int, seed: int,
                                cuts=wireless.cut_candidates)
     sched = make_scheduler(
         wireless, h.num_clients, kappa0=h.kappa0, comm_table=table,
-        es_assign=np.arange(h.num_clients) // h.clients_per_es,
+        es_assign=es_assignment(h.num_clients, h.clients_per_es),
         fixed_cut=fixed_cut if fixed_cut in table else 0)
     network = [sched.step(r).to_json_dict()
                for r in range(rounds * h.kappa1)]

@@ -47,6 +47,7 @@ from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
 from repro.configs.sweeps import sweep_hierarchy, sweep_train, sweep_wireless
 from repro.core.comm import comm_table_for_cnn
 from repro.core.fedsim import FedSim
+from repro.core.hierarchy import es_assignment
 from repro.data.synthetic import make_federated_image_data
 from repro.wireless import make_scheduler
 
@@ -130,7 +131,7 @@ def dry_run_one(policy: str, retries: int, lam: float, erasure: float, *,
                                batches_per_epoch=2)
     sched = make_scheduler(
         wireless, h.num_clients, kappa0=h.kappa0, comm_table=table,
-        es_assign=np.arange(h.num_clients) // h.clients_per_es)
+        es_assign=es_assignment(h.num_clients, h.clients_per_es))
     # the acceptance bar is statistical (bank deliveries land ROUNDS after
     # the failure they rescue), so the cheap scheduler-only sweep drives a
     # floor of edge rounds no matter how small --rounds is

@@ -27,6 +27,7 @@ import numpy as np
 from repro.configs.base import WirelessConfig
 from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
 from repro.core.comm import comm_table_for_cnn
+from repro.core.hierarchy import es_assignment
 from repro.models.cnn import CUT_CANDIDATES
 from repro.wireless import client_round_bits, client_round_flops, \
     make_scheduler
@@ -43,7 +44,7 @@ def run(gflops: float, sigma: float, args, table):
                          compute_power_w=0.2, energy_budget_j=50.0,
                          seed=args.seed)
     sched = make_scheduler(cfg, 8, kappa0=KAPPA0, comm_table=table,
-                           es_assign=np.arange(8) // 4)
+                           es_assign=es_assignment(8, 4))
     rep = sched.step(0)
     return sched, rep
 

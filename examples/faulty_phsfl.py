@@ -33,6 +33,7 @@ import numpy as np
 from repro.configs.base import FaultConfig, WirelessConfig
 from repro.core.comm import comm_for_cnn
 from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.core.hierarchy import es_assignment
 from repro.wireless import client_round_bits, make_scheduler
 
 KAPPA0 = 2
@@ -50,7 +51,7 @@ def scenario(args, **faults) -> WirelessConfig:
 
 def _sched(comm, cfg):
     return make_scheduler(cfg, U, comm, KAPPA0,
-                          es_assign=np.arange(U) // (U // 2))
+                          es_assign=es_assignment(U, U // 2))
 
 
 def main():

@@ -32,6 +32,7 @@ import numpy as np
 from repro.configs.base import WirelessConfig
 from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
 from repro.core.comm import comm_for_cnn
+from repro.core.hierarchy import es_assignment
 from repro.wireless import client_round_bits, make_scheduler
 
 KAPPA0 = 2
@@ -67,7 +68,7 @@ def main():
     for pipeline in (False, True):
         cfg = scenario(pipeline, args)
         sched = make_scheduler(cfg, U, comm, KAPPA0,
-                               es_assign=np.arange(U) // (U // 2))
+                               es_assign=es_assignment(U, U // 2))
         link = sched.channel.sample(0)
         tl = sched._timeline(link, bits, sched._compute_s(None))
         name = "pipelined" if pipeline else "serial"

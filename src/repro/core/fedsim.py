@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import HierarchyConfig, TrainConfig, WirelessConfig
 from repro.configs.phsfl_cnn import CNNConfig
+from repro.core.hierarchy import es_assignment
 from repro.data.synthetic import FederatedImageData
 from repro.models import cnn
 
@@ -119,8 +120,34 @@ class FedSim:
                  hcfg: HierarchyConfig, tcfg: TrainConfig, *,
                  batches_per_epoch: int = 5, seed: int = 0,
                  wireless: WirelessConfig | None = None,
-                 cut: str | None = None, codecs=None, telemetry=None):
-        assert data.num_clients == hcfg.num_clients
+                 cut: str | None = None, codecs=None, telemetry=None,
+                 population=None, sampling: str = "uniform"):
+        # population mode (repro.wireless.population): hcfg.num_clients
+        # becomes the COHORT size (training slots); each edge round the
+        # scheduler samples that many registered clients, ES-balanced so
+        # slot i's home ES stays i // Ub, and slot i trains on data shard
+        # cohort[i] % data.num_clients.  Without a population the classic
+        # invariant holds: one shard per permanent client.
+        self.population = population
+        self.sampling = sampling
+        self._slot_shard = None          # (U,) per-round slot -> data shard
+        self._cohort = None              # (U,) per-round slot -> client id
+        if population is None:
+            assert data.num_clients == hcfg.num_clients
+        else:
+            if wireless is None or wireless.model == "ideal":
+                raise ValueError("population mode needs a wireless config "
+                                 "(the cohort sampler lives on the "
+                                 "scheduler)")
+            if population.num_es != hcfg.num_edge_servers:
+                raise ValueError(
+                    f"population has {population.num_es} edge servers but "
+                    f"the hierarchy has {hcfg.num_edge_servers}")
+            if wireless.staleness_lambda > 0.0:
+                raise ValueError(
+                    "staleness_lambda > 0 is incompatible with population "
+                    "mode: the bank keys snapshots by client identity, but "
+                    "training slots remap to different clients every round")
         self.cfg, self.data, self.h, self.t = cfg, data, hcfg, tcfg
         self.batches_per_epoch = batches_per_epoch
         # the TRAINING cut: which boundary split_grad exchanges activations
@@ -158,7 +185,18 @@ class FedSim:
             # dataset — the mean silently undercounts for every bigger-than-
             # average client under a skewed Dirichlet split (alpha << 1)
             max_size = int(max(len(i) for i in data.train_indices))
-            es_assign = np.arange(hcfg.num_clients) // hcfg.clients_per_es
+            if population is not None:
+                from repro.wireless.population import CohortScheduler
+                sched_u = population.N
+                es_assign = population.es_assign
+                extra = dict(cls=CohortScheduler, population=population,
+                             cohort_size=hcfg.num_clients, sampling=sampling,
+                             es_balanced=True)
+            else:
+                sched_u = hcfg.num_clients
+                es_assign = es_assignment(hcfg.num_clients,
+                                          hcfg.clients_per_es)
+                extra = {}
             kw = dict(dataset_size=max(max_size, 2),
                       batch_size=tcfg.batch_size,
                       batches_per_epoch=batches_per_epoch,
@@ -172,16 +210,16 @@ class FedSim:
                         f"{tuple(table)} but the training cut is "
                         f"{self.cut!r}; add it to cut_candidates")
                 self.scheduler = make_scheduler(
-                    wireless, hcfg.num_clients, kappa0=hcfg.kappa0,
+                    wireless, sched_u, kappa0=hcfg.kappa0,
                     comm_table=table, es_assign=es_assign,
                     fixed_cut=self.cut if self.cut in table else 0,
-                    telemetry=telemetry)
+                    telemetry=telemetry, **extra)
             else:
                 comm = comm_for_cnn(cfg, cut=self.cut, **kw)
-                self.scheduler = make_scheduler(wireless, hcfg.num_clients,
+                self.scheduler = make_scheduler(wireless, sched_u,
                                                 comm, hcfg.kappa0,
                                                 es_assign=es_assign,
-                                                telemetry=telemetry)
+                                                telemetry=telemetry, **extra)
         self._edge_round = 0
         # staleness-weighted async edge aggregation (scheduler banks a
         # straggler's remainder; we snapshot its stacked params at the
@@ -204,8 +242,15 @@ class FedSim:
 
         U, B = hcfg.num_clients, hcfg.num_edge_servers
         self.U, self.B, self.Ub = U, B, hcfg.clients_per_es
-        # aggregation weights (paper Eq. 4/6): proportional to |D_u|
-        sizes = np.array([len(i) for i in data.train_indices], np.float64)
+        # aggregation weights (paper Eq. 4/6): proportional to |D_u|.  In
+        # population mode slot identity changes every edge round, so these
+        # are uniform placeholders — _set_cohort_weights overwrites them
+        # from population.data_size before each aggregation.
+        if population is not None:
+            sizes = np.ones(U, np.float64)
+        else:
+            sizes = np.array([len(i) for i in data.train_indices],
+                             np.float64)
         if hcfg.weighting == "uniform":
             sizes = np.ones_like(sizes)
         es_sizes = sizes.reshape(B, self.Ub).sum(axis=1)
@@ -292,9 +337,11 @@ class FedSim:
         passes its own stream so fine-tuning is invariant to how much
         training preceded it."""
         rng = self.rng if rng is None else rng
+        shards = self._slot_shard
         xs, ys = [], []
         for u in range(self.U):
-            x, y = self.data.client_train(u)
+            x, y = self.data.client_train(
+                u if shards is None else int(shards[u]))
             idx = rng.choice(len(x), size=batch_size,
                              replace=len(x) < batch_size)
             xs.append(x[idx])
@@ -304,7 +351,7 @@ class FedSim:
     def _stacked_test(self, cap: int = 256):
         xs, ys, ws = [], [], []
         for u in range(self.U):
-            x, y = self.data.client_test(u)
+            x, y = self.data.client_test(u % self.data.num_clients)
             n = min(len(x), cap)
             pad = cap - n
             xs.append(np.pad(x[:n], ((0, pad),) + ((0, 0),) * 3))
@@ -316,6 +363,27 @@ class FedSim:
             ws.append(w)
         return (jnp.asarray(np.stack(xs)), jnp.asarray(np.stack(ys)),
                 jnp.asarray(np.stack(ws)))
+
+    # ---------------------------------------------------------- cohorts ---
+    def _begin_cohort_round(self):
+        """Population mode, top of each edge round: draw the cohort BEFORE
+        the local epochs (the slots must know whose shard to train on),
+        remap slot -> data shard, and recompute the Eq. 4/6 weights from
+        the sampled clients' registered dataset sizes."""
+        sched = self.scheduler
+        cohort = sched.sample_cohort()
+        self._cohort = cohort
+        self._slot_shard = cohort % self.data.num_clients
+        if self.h.weighting == "uniform":
+            sizes = np.ones(self.U, np.float64)
+        else:
+            sizes = np.asarray(self.population.data_size,
+                               np.float64)[cohort]
+        es_sizes = sizes.reshape(self.B, self.Ub).sum(axis=1)
+        self.alpha_u = (sizes.reshape(self.B, self.Ub)
+                        / es_sizes[:, None]).reshape(self.U)
+        self.alpha_b = es_sizes / es_sizes.sum()
+        return cohort
 
     # ------------------------------------------------------- aggregation --
     def _masked_edge_weights(self, mask, stale_w=None):
@@ -519,6 +587,8 @@ class FedSim:
             parts = []
             for t1 in range(h.kappa1):                       # edge rounds
                 prev = stacked if sched is not None else None
+                cohort = (self._begin_cohort_round()
+                          if self.population is not None else None)
                 for _ in range(h.kappa0):                    # local epochs
                     for _ in range(self.batches_per_epoch):  # minibatches
                         x, y = self._sample_minibatches(t.batch_size)
@@ -537,6 +607,10 @@ class FedSim:
                 else:                                        # masked Eq. 14-15
                     rep = sched.step(self._edge_round)
                     self._edge_round += 1
+                    if cohort is not None:
+                        # population-wide (N,) report -> this round's slots
+                        from repro.wireless.population import cohort_report
+                        rep = cohort_report(rep, cohort)
                     live = rep.mask > 0
                     if rep.es_map is not None:
                         # failover round: participation counts for the ES
@@ -635,6 +709,11 @@ class FedSim:
                                 old, new),
                             agged, stacked)
                     stacked = agged
+                    if cohort is not None:
+                        # registry bookkeeping: participants now hold the
+                        # edge model refreshed at this round
+                        self.population.head_slot[cohort[live]] = \
+                            rep.round_idx
             if sched is None:
                 stacked = self._global_aggregate(stacked)    # Eq. 16
             else:                                            # masked Eq. 16

@@ -29,6 +29,19 @@ def normalized_weights(sizes) -> np.ndarray:
     return s / s.sum()
 
 
+def es_assignment(num_clients: int, clients_per_es: int) -> np.ndarray:
+    """The default client -> edge-server map: contiguous round-robin blocks
+    (client u belongs to ES ``u // clients_per_es``).
+
+    The SINGLE source of truth for the static layout — FedSim, the train
+    launcher, and ``repro.wireless.population.Population`` all derive it
+    here (they used to each hand-roll the same ``arange // Ub``, which is
+    how a refactor desynchronizes the scheduler's contention groups from
+    the aggregation hierarchy).  Location-clustered alternatives live on
+    ``Population`` (``assignment="kmeans"``)."""
+    return np.arange(int(num_clients)) // int(clients_per_es)
+
+
 # ------------------------------------------------------------ host side ----
 def edge_aggregate(client_trees: list, alpha_u) -> object:
     """Eq. (4)/(14-15): w_b = sum_u alpha_u w_u  (alpha_u on the simplex)."""

@@ -32,6 +32,7 @@ from repro.core import (build_optimizer, init_stacked_params,
                         make_host_round, make_phsfl_round,
                         personalize_head_bank, personalized_eval)
 from repro.core.comm import comm_for_lm, comm_table_for_lm
+from repro.core.hierarchy import es_assignment
 from repro.data.synthetic import synthetic_token_batch
 from repro.launch.mesh import set_mesh
 from repro.models import build_model
@@ -93,6 +94,22 @@ def main(argv=None):
                          "checkpoint (crash simulation for the resume "
                          "smoke test)")
     ap.add_argument("--seed", type=int, default=0)
+    # ---- population-scale cohorts (repro.wireless.population) ----
+    ap.add_argument("--population", type=int, default=0,
+                    help="register N clients in a persistent population and "
+                         "sample a cohort per round; the scheduler then "
+                         "prices ALL N channels/budgets while only the "
+                         "cohort trains (0 = classic fixed-client mode). "
+                         "Requires a non-ideal --channel")
+    ap.add_argument("--cohort-size", type=int, default=None,
+                    help="clients trained per round in population mode "
+                         "(default: --clients); becomes the slot count of "
+                         "the training mesh")
+    ap.add_argument("--sampling", default="uniform",
+                    choices=["uniform", "rate", "pareto"],
+                    help="cohort sampling rule: uniform, biased toward "
+                         "good channels (rate), or a Pareto-style "
+                         "participation cap (least-sampled first)")
     # ---- wireless scenario (repro.wireless) ----
     ap.add_argument("--channel", default="ideal",
                     choices=["ideal", "static", "rayleigh"],
@@ -181,6 +198,16 @@ def main(argv=None):
     cfg = get_arch(args.arch).reduced()
     model = build_model(cfg)
     C = args.clients
+    population = None
+    if args.population:
+        if args.channel == "ideal":
+            ap.error("--population requires a non-ideal --channel (the "
+                     "cohort sampler lives on the wireless scheduler)")
+        from repro.wireless.population import Population
+        C = args.cohort_size or C
+        if args.population < C:
+            ap.error("--population must be >= the cohort size")
+        population = Population(args.population, seed=args.seed)
 
     # single-host mesh: all clients on the 'data' axis of a (C,1) mesh if we
     # have C devices, else a (1,1) mesh with client dim = C still carried in
@@ -232,7 +259,16 @@ def main(argv=None):
                        dataset_size=args.rounds * args.local_steps *
                        args.micro, batch_size=args.micro,
                        batches_per_epoch=1, codecs=codecs)
-        es_assign = np.arange(C) // hcfg.clients_per_es
+        if population is not None:
+            from repro.wireless.population import CohortScheduler
+            sched_u = population.N
+            es_assign = population.es_assign
+            sched_extra = dict(cls=CohortScheduler, population=population,
+                               cohort_size=C, sampling=args.sampling)
+        else:
+            sched_u = C
+            es_assign = es_assignment(C, hcfg.clients_per_es)
+            sched_extra = {}
         if wcfg.cut_policy != "fixed" or candidates:
             table = comm_table_for_lm(
                 cfg, cuts=candidates or (cfg.n_client_layers,), **comm_kw)
@@ -242,15 +278,16 @@ def main(argv=None):
                     f"but the model's client depth is {cfg.n_client_layers}; "
                     f"include it in --cut-candidates")
             scheduler = make_scheduler(
-                wcfg, C, kappa0=hcfg.kappa0, comm_table=table,
+                wcfg, sched_u, kappa0=hcfg.kappa0, comm_table=table,
                 es_assign=es_assign,
                 fixed_cut=cfg.n_client_layers
                 if cfg.n_client_layers in table else 0,
-                telemetry=tel)
+                telemetry=tel, **sched_extra)
         else:
             comm = comm_for_lm(cfg, **comm_kw)
-            scheduler = make_scheduler(wcfg, C, comm, hcfg.kappa0,
-                                       es_assign=es_assign, telemetry=tel)
+            scheduler = make_scheduler(wcfg, sched_u, comm, hcfg.kappa0,
+                                       es_assign=es_assign, telemetry=tel,
+                                       **sched_extra)
     participation = scheduler is not None
     tel.write_manifest(config=vars(args),
                        seeds={"seed": args.seed},
@@ -319,6 +356,10 @@ def main(argv=None):
                                         args.seq, seed=args.seed + r)
             if scheduler is not None:
                 rep = scheduler.step(r)
+                if population is not None:
+                    # (N,)-wide report -> this round's C training slots
+                    from repro.wireless.population import cohort_report
+                    rep = cohort_report(rep, scheduler.last_cohort)
                 sim_time += rep.round_time_s
                 mask = jnp.asarray(rep.mask, jnp.float32)
                 params, opt_state, metrics = round_fn(

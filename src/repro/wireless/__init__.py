@@ -168,6 +168,40 @@ Participation (``repro.wireless.scheduler.ParticipationScheduler``):
   discarded.
 - ``seed``: RNG seed for fading draws, heterogeneity, and thinning.
 
+Population & cohorts (``repro.wireless.population``):
+
+- ``Population(num_clients, num_es=, assignment=, seed=)``: the
+  struct-of-arrays registry for population-scale runs — packed per-client
+  coordinates, ES assignment (``"round_robin"`` via
+  ``repro.core.hierarchy.es_assignment`` or ``"kmeans"`` location
+  clusters), Dirichlet data-skew sizes, a personalized-head round pointer,
+  and a participation counter, sized for 10**5..10**6 registered clients.
+  All population draws come from a dedicated ``seed + 5`` stream (channel
+  = ``seed``, thinning ``+1``, device ``+2``, personalize ``+3``, faults
+  ``+4``), so registering a population never perturbs the other streams.
+- ``sampling``: per-round cohort selection over the registry —
+  ``"uniform"`` (i.i.d.), ``"rate"`` (mean-uplink-biased), ``"pareto"``
+  (participation-capped: the least-served eligible clients first, so
+  coverage is Pareto-balanced across rounds); ``es_balanced=True`` keeps
+  each ES's slot count fixed so the hierarchy shape never changes.
+- ``CohortScheduler`` / ``make_cohort_scheduler``: a drop-in
+  :class:`ParticipationScheduler` subclass whose fault-free and
+  ES-outage-only rounds run as two fused jit/vmap float64 computations
+  over (N,) arrays (``repro.wireless.scheduler_core``) instead of the
+  host numpy loop — BIT-IDENTICAL to the oracle at any U (pinned across
+  every channel/contention/pipeline/fault config by
+  ``tests/test_population.py``), single-digit seconds per 10**6-client
+  round on CPU (``benchmarks/cohort_bench.py`` -> ``BENCH_cohort.json``).
+  Rounds carrying an erasure/crash fault plan delegate to the inherited
+  oracle ``step()`` verbatim, sharing all mutable state.
+- ``FedSim(..., population=, sampling=)`` / ``launch/train.py
+  --population N --cohort-size C --sampling``: train over a registered
+  population by sampling an ES-balanced cohort of ``hcfg.num_clients``
+  training slots each round; ``cohort_report`` slices the (N,)-shaped
+  :class:`RoundReport` down to the cohort's slots.  Requires a non-ideal
+  channel and ``staleness_lambda == 0`` (the stale bank keys by client
+  identity, which cohort slots remap per round).
+
 Observability (``repro.telemetry``):
 
 - ``make_scheduler(..., telemetry=)`` / ``ParticipationScheduler(...,
@@ -200,6 +234,9 @@ from repro.wireless.device import DeviceModel, client_round_flops
 from repro.wireless.faults import (FaultConfig, FaultInjector, FaultPlan,
                                    expected_attempts)
 from repro.wireless.scheduler import ParticipationScheduler, RoundReport
+from repro.wireless.population import (CohortScheduler, Population,
+                                       cohort_report, kmeans_assign,
+                                       make_cohort_scheduler)
 from repro.wireless.timeline import RoundTimeline, build_timeline
 
 __all__ = [
@@ -209,13 +246,15 @@ __all__ = [
     "DeviceModel", "client_round_flops",
     "FaultConfig", "FaultInjector", "FaultPlan", "expected_attempts",
     "ParticipationScheduler", "RoundReport", "make_scheduler",
+    "CohortScheduler", "Population", "cohort_report", "kmeans_assign",
+    "make_cohort_scheduler",
     "RoundTimeline", "build_timeline",
 ]
 
 
 def make_scheduler(cfg, num_clients: int, comm=None, kappa0: int = 1, *,
                    comm_table=None, es_assign=None, fixed_cut=0,
-                   telemetry=None):
+                   telemetry=None, cls=None, **extra):
     """Convenience: CommModel byte accounting -> channel -> scheduler.
 
     Pass either one ``comm`` (a single fixed cut, the original behavior) or
@@ -227,8 +266,12 @@ def make_scheduler(cfg, num_clients: int, comm=None, kappa0: int = 1, *,
     :class:`DeviceModel` built from the same config prices client compute
     alongside the bits (free when ``compute_gflops`` is inf).
     ``telemetry`` (a :class:`repro.telemetry.Telemetry`, default off) makes
-    the scheduler record every round's trace and metrics.
+    the scheduler record every round's trace and metrics.  ``cls`` swaps
+    the scheduler class (``repro.wireless.population.CohortScheduler``
+    uses it, forwarding its population knobs through ``extra``); the
+    default is :class:`ParticipationScheduler`, byte-for-byte.
     """
+    cls = ParticipationScheduler if cls is None else cls
     channel = ChannelModel(cfg, num_clients)
     device = DeviceModel(cfg, num_clients)
     # HARQ pricing for the cut controller: only a lossy channel changes the
@@ -246,12 +289,10 @@ def make_scheduler(cfg, num_clients: int, comm=None, kappa0: int = 1, *,
             codec_cycles_per_element=cfg.codec_cycles_per_element,
             pipeline=cfg.pipeline, expected_attempts=ea,
             harq_backoff_s=backoff)
-        return ParticipationScheduler(cfg, channel, cutter=cutter,
-                                      es_assign=es_assign, device=device,
-                                      telemetry=telemetry)
+        return cls(cfg, channel, cutter=cutter, es_assign=es_assign,
+                   device=device, telemetry=telemetry, **extra)
     bits = client_round_bits(comm, kappa0)
     flops = client_round_flops(
         comm, kappa0, codec_cycles_per_element=cfg.codec_cycles_per_element)
-    return ParticipationScheduler(cfg, channel, bits, es_assign=es_assign,
-                                  device=device, flops=flops,
-                                  telemetry=telemetry)
+    return cls(cfg, channel, bits, es_assign=es_assign, device=device,
+               flops=flops, telemetry=telemetry, **extra)

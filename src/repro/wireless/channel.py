@@ -118,6 +118,35 @@ class ChannelModel:
             self._scale = np.ones(num_clients)
 
     # ----------------------------------------------------------- sampling --
+    def fades(self, round_idx: int):
+        """This round's fading entropy: ``(fade, down_row)``.
+
+        The ONLY per-round stochastic draw of the channel, factored out so
+        the vectorized cohort path (``repro.wireless.scheduler_core``) can
+        consume the same stream and rebuild the same rates in-trace:
+        ``fade`` is ones (static), Exp(1) draws (rayleigh), or the resized
+        trace row rescaled to a fade factor; ``down_row`` is the resized
+        measured downlink trace row (None without one).  ``sample`` is
+        defined in terms of this method, so both paths advance ``_rng``
+        identically.  Returns ``(None, None)`` for the ideal model."""
+        cfg, U = self.cfg, self.U
+        if cfg.model == "ideal":
+            return None, None
+        if cfg.model == "static":
+            fade = np.ones(U)
+        elif cfg.model == "rayleigh":
+            fade = self._rng.exponential(1.0, size=U)
+        else:  # trace
+            row = np.asarray(cfg.trace[round_idx % len(cfg.trace)], float)
+            up_mean = cfg.mean_uplink_mbps * 1e6
+            fade = np.resize(row, U) * 1e6 / up_mean  # trace IS the uplink
+        down_row = None
+        if cfg.model == "trace" and cfg.trace_down:
+            drow = np.asarray(
+                cfg.trace_down[round_idx % len(cfg.trace_down)], float)
+            down_row = np.resize(drow, U)
+        return fade, down_row
+
     def sample(self, round_idx: int) -> LinkState:
         cfg, U = self.cfg, self.U
         up_mean = cfg.mean_uplink_mbps * 1e6
@@ -125,25 +154,17 @@ class ChannelModel:
         if cfg.model == "ideal":
             inf = np.full(U, np.inf)
             return LinkState(inf, inf, np.zeros(U))
-        if cfg.model == "static":
-            fade = np.ones(U)
-        elif cfg.model == "rayleigh":
-            fade = self._rng.exponential(1.0, size=U)
-        else:  # trace
-            row = np.asarray(cfg.trace[round_idx % len(cfg.trace)], float)
-            fade = np.resize(row, U) * 1e6 / up_mean  # trace IS the uplink
+        fade, down_row = self.fades(round_idx)
         up = np.maximum(up_mean * self._scale * fade, 1.0)
         down = np.maximum(down_mean * self._scale * fade, 1.0)
-        if cfg.model == "trace" and cfg.trace_down:
+        if down_row is not None:
             # a measured downlink trace (round-major, cycled, resized — the
             # same shape rules as ``trace``) is honored as-is.  Without one,
             # the ``down`` above is the documented FALLBACK: the uplink
             # trace rescaled by the configured mean downlink/uplink ratio —
             # fabricated fading perfectly correlated with the uplink; record
             # a trace_down pair whenever up/down asymmetry matters.
-            drow = np.asarray(
-                cfg.trace_down[round_idx % len(cfg.trace_down)], float)
-            down = np.maximum(np.resize(drow, U) * 1e6 * self._scale, 1.0)
+            down = np.maximum(down_row * 1e6 * self._scale, 1.0)
         return LinkState(up, down, np.full(U, cfg.latency_s))
 
     # -------------------------------------------------------- contention --

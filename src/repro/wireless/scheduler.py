@@ -154,6 +154,21 @@ Failure semantics (``WirelessConfig.faults``; repro.wireless.faults):
   ``seed+4`` stream with FIXED per-round shapes, so enabling faults never
   perturbs fading/thinning draws and checkpoint/resume (``state_dict`` /
   ``load_state_dict``) replays the exact fault schedule.
+
+Oracle contract (population-scale twin): this numpy scheduler is the
+REFERENCE ORACLE for the vectorized cohort path — ``repro.wireless.
+population.CohortScheduler`` re-derives the same per-round decisions as
+fused float64 jax ops (``repro.wireless.scheduler_core``) and must
+reproduce this class's :class:`RoundReport` BIT-IDENTICALLY on every
+fault-free (and outage-only) configuration; rounds with an erasure/crash
+fault plan are delegated back to this implementation.  The equivalence
+is pinned by the U=8 property test in ``tests/test_population.py``
+across channel models, contention rules, pipeline on/off, selection
+policies, and fault-injected rounds.  When changing any per-round
+expression here, keep ``scheduler_core`` in lockstep (or the property
+test will say so).  ``cohort_mask`` (set per round by CohortScheduler,
+None otherwise) restricts gate 1 to a sampled cohort; the default None
+leaves this class's behavior byte-for-byte unchanged.
 """
 
 from __future__ import annotations
@@ -326,6 +341,11 @@ class ParticipationScheduler:
         # I/O, no RNG, no arithmetic on scheduler state
         self.telemetry = telemetry
         self.last_timeline = None          # the most recent step's timeline
+        # cohort restriction (population-scale runs): a (U,) bool mask
+        # ANDed into gate 1 each round, so only the sampled cohort can be
+        # scheduled while everyone else's state (energy, banks) advances.
+        # None (the default) is byte-for-byte the unrestricted scheduler.
+        self.cohort_mask = None
 
     def _bits_cuts(self, up_bps, down_bps, latency_s):
         """Cut decision (or the fixed bits) at the given rates."""
@@ -431,6 +451,8 @@ class ParticipationScheduler:
         gate1 = (self.energy_left >= charge) & tl.can_tx
         if client_down is not None:
             gate1 &= ~client_down        # outage-skipped: never scheduled
+        if self.cohort_mask is not None:
+            gate1 &= self.cohort_mask    # population runs: sampled cohort
         scheduled = gate1.copy()
         if cfg.selection == "topk" and cfg.topk > 0:     # gate 2a: k fastest
             order = np.argsort(np.where(scheduled, times0, np.inf))

@@ -17,7 +17,7 @@ import pytest
 REPO = Path(__file__).resolve().parents[1]
 SWEEPS = ["benchmarks/cut_sweep.py", "benchmarks/compress_sweep.py",
           "benchmarks/device_sweep.py", "benchmarks/pipeline_sweep.py",
-          "benchmarks/fault_sweep.py"]
+          "benchmarks/fault_sweep.py", "benchmarks/cohort_bench.py"]
 
 
 def _run(script: str, *args: str, cwd=None):

@@ -1,0 +1,322 @@
+"""Population-scale cohort simulation (repro.wireless.population).
+
+The load-bearing property: ``CohortScheduler`` — the jit/vmap-rewritten
+per-round decision path — is BIT-IDENTICAL to the numpy
+``ParticipationScheduler`` oracle, field by field of every RoundReport
+and over every piece of carried mutable state, across all channel
+models, contention rules, pipeline on/off, selection/cut policies,
+staleness, and fault-injected rounds (ES outages vectorize; erasure/
+crash rounds delegate to the inherited oracle path on shared state).
+
+Plus the population layer itself: sampling rules, k-means vs round-robin
+ES assignment, the FedSim cohort mode, and checkpoint resume.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import (FaultConfig, HierarchyConfig, TrainConfig,
+                                WirelessConfig)
+from repro.configs.phsfl_cnn import CONFIG as CNN_CFG
+from repro.core.comm import comm_for_cnn, comm_table_for_cnn
+from repro.core.hierarchy import es_assignment
+from repro.wireless import make_scheduler
+from repro.wireless.population import (CohortScheduler, Population,
+                                       cohort_report, kmeans_assign,
+                                       make_cohort_scheduler)
+from repro.wireless.scheduler import RoundReport
+
+U = 8
+ES2 = np.arange(U) // 4
+BASE = dict(mean_uplink_mbps=8.0, mean_downlink_mbps=30.0, latency_s=0.01,
+            deadline_s=1.5, energy_budget_j=20.0, tx_power_w=0.7,
+            heterogeneity=0.5, seed=3)
+TRACE = tuple(tuple(5.0 + 3 * ((i * 7 + j * 3) % 5) for j in range(U))
+              for i in range(4))
+TRACE_DOWN = tuple(tuple(20.0 + 5 * ((i * 3 + j) % 4) for j in range(U))
+                   for i in range(4))
+OUTAGE = tuple((0, 1) if i % 3 == 1 else (0, 0) for i in range(6))
+
+# every decision-path configuration the oracle supports; the vectorized
+# scheduler must reproduce each one bit-for-bit at U=8 over 6 rounds
+CONFIGS = {
+    "static": dict(model="static", **BASE),
+    "rayleigh": dict(model="rayleigh", **BASE),
+    "trace": dict(model="trace", trace=TRACE, **BASE),
+    "trace_down": dict(model="trace", trace=TRACE, trace_down=TRACE_DOWN,
+                       **BASE),
+    "contend_eq": dict(model="rayleigh", es_uplink_mbps=12.0, **BASE),
+    "contend_prop": dict(model="rayleigh", es_uplink_mbps=12.0,
+                         contention="proportional", **BASE),
+    "contend_noreshare": dict(model="rayleigh", es_uplink_mbps=12.0,
+                              contention="proportional",
+                              reshare_uplink=False, **BASE),
+    "pipeline": dict(model="rayleigh", pipeline=True, **BASE),
+    "pipeline_contend": dict(model="rayleigh", pipeline=True,
+                             es_uplink_mbps=12.0,
+                             contention="proportional", **BASE),
+    "greedy_cut": dict(model="rayleigh", cut_policy="greedy",
+                       compute_gflops=2.0, compute_heterogeneity=0.4,
+                       compute_power_w=0.3, **BASE),
+    "deadline_cut": dict(model="rayleigh", cut_policy="deadline",
+                         es_uplink_mbps=12.0, contention="proportional",
+                         compute_gflops=2.0, compute_power_w=0.3, **BASE),
+    "topk": dict(model="rayleigh", selection="topk", topk=3,
+                 es_uplink_mbps=10.0, contention="proportional", **BASE),
+    "random": dict(model="rayleigh", selection="random",
+                   participation_prob=0.6, **BASE),
+    "stale": dict(model="rayleigh", staleness_lambda=0.5, **BASE),
+    "ideal": dict(model="ideal"),
+    # fault injection: ES outages run the vectorized path; erasure/crash
+    # rounds draw a FaultPlan and delegate to the oracle on shared state
+    "outage_reassoc": dict(model="rayleigh", es_uplink_mbps=12.0,
+                           contention="proportional",
+                           faults=FaultConfig(es_outage_trace=OUTAGE),
+                           **BASE),
+    "outage_skip": dict(model="rayleigh", es_uplink_mbps=12.0,
+                        faults=FaultConfig(es_outage_trace=OUTAGE,
+                                           failover="skip"), **BASE),
+    "harq": dict(model="rayleigh",
+                 faults=FaultConfig(erasure_prob=0.3, max_retries=2,
+                                    backoff_s=0.02), **BASE),
+    "crash": dict(model="rayleigh", faults=FaultConfig(crash_hazard=0.3),
+                  **BASE),
+    "harq_outage_stale": dict(model="rayleigh", staleness_lambda=0.5,
+                              es_uplink_mbps=12.0,
+                              faults=FaultConfig(erasure_prob=0.25,
+                                                 max_retries=2,
+                                                 backoff_s=0.02,
+                                                 es_outage_trace=OUTAGE),
+                              **BASE),
+}
+# which configs use the cut-candidate table and which the two-ES layout
+TABLE = {"greedy_cut", "deadline_cut"}
+TWO_ES = {"contend_eq", "contend_prop", "contend_noreshare",
+          "pipeline_contend", "deadline_cut", "topk", "outage_reassoc",
+          "outage_skip", "harq_outage_stale"}
+
+
+def _pair(name):
+    wcfg = WirelessConfig(**CONFIGS[name])
+    es = ES2 if name in TWO_ES else None
+    kw = dict(dataset_size=400, batch_size=16)
+    if name in TABLE:
+        t = comm_table_for_cnn(CNN_CFG, **kw)
+        mk = lambda **e: make_scheduler(wcfg, U, kappa0=2, comm_table=t,
+                                        es_assign=es, **e)
+    else:
+        c = comm_for_cnn(CNN_CFG, **kw)
+        mk = lambda **e: make_scheduler(wcfg, U, c, 2, es_assign=es, **e)
+    return mk(), mk(cls=CohortScheduler)
+
+
+def _assert_reports_equal(ra, rb, tag=""):
+    for f in dataclasses.fields(RoundReport):
+        va, vb = getattr(ra, f.name), getattr(rb, f.name)
+        if isinstance(va, np.ndarray) or isinstance(vb, np.ndarray):
+            assert (va is None) == (vb is None), (tag, f.name)
+            assert np.array_equal(np.asarray(va), np.asarray(vb)), \
+                (tag, f.name, va, vb)
+        else:
+            assert va == vb, (tag, f.name, va, vb)
+
+
+# ------------------------------------------------ bit-identity property ----
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_vectorized_matches_oracle(name):
+    oracle, vec = _pair(name)
+    assert type(oracle).__name__ == "ParticipationScheduler"
+    for r in range(6):
+        _assert_reports_equal(oracle.step(r), vec.step(r), f"{name} r{r}")
+    # the carried mutable state advanced in lockstep too
+    for attr in ("energy_left", "_stale_pending", "_stale_age"):
+        assert np.array_equal(getattr(oracle, attr), getattr(vec, attr)), \
+            (name, attr)
+
+
+@pytest.mark.parametrize("name", ["contend_prop", "topk"])
+def test_vectorized_matches_oracle_under_cohort_mask(name):
+    """An externally pinned cohort mask thins gate 1 identically."""
+    oracle, vec = _pair(name)
+    mrng = np.random.default_rng(77)
+    for r in range(6):
+        mask = mrng.random(U) < 0.6
+        oracle.cohort_mask = mask
+        vec.cohort_mask = mask
+        _assert_reports_equal(oracle.step(r), vec.step(r), f"{name} r{r}")
+
+
+def test_vectorized_checkpoint_resume():
+    """state_dict/load_state_dict into a fresh CohortScheduler continues
+    the oracle's trajectory bit-identically mid-run."""
+    oracle, vec = _pair("contend_prop")
+    for r in range(3):
+        oracle.step(r)
+        vec.step(r)
+    _, vec2 = _pair("contend_prop")
+    vec2.load_state_dict(vec.state_dict())
+    for r in range(3, 6):
+        _assert_reports_equal(oracle.step(r), vec2.step(r), f"resume r{r}")
+
+
+# ------------------------------------------------------- the population ----
+def test_es_assignment_round_robin_pinned():
+    # the canonical layout every layer shares (regression pin: FedSim,
+    # train.py, and Population.round_robin all used to hand-roll this)
+    assert np.array_equal(es_assignment(8, 4), np.array([0] * 4 + [1] * 4))
+    pop = Population(10, num_es=3, seed=0, assignment="round_robin")
+    assert np.array_equal(pop.es_assign,
+                          np.array([0, 0, 0, 0, 1, 1, 1, 1, 2, 2]))
+
+
+def test_kmeans_assignment_clusters_by_location():
+    rng = np.random.default_rng(0)
+    centers = np.array([[0.1, 0.1], [0.9, 0.9], [0.1, 0.9]])
+    coords = np.concatenate([c + 0.03 * rng.standard_normal((50, 2))
+                             for c in centers])
+    labels, found = kmeans_assign(coords, 3, np.random.default_rng(1))
+    # each ground-truth blob lands in exactly one cluster
+    for blob in range(3):
+        assert len(set(labels[50 * blob:50 * (blob + 1)])) == 1
+    assert len(set(labels)) == 3
+    pop = Population(150, num_es=3, seed=0, assignment="kmeans")
+    assert sorted(np.bincount(pop.es_assign, minlength=3)) != [0, 0, 150]
+
+
+def test_population_sampling_methods():
+    pop = Population(100, num_es=2, seed=0)
+    a = pop.sample_cohort(10, "uniform")
+    assert len(a) == len(set(a.tolist())) == 10
+    assert (pop.part_count.sum() == 10) and (pop.part_count.max() == 1)
+    # pareto-style cap: the least-sampled clients go first, so 10 rounds
+    # of 10 visit every client exactly once before anyone repeats
+    pop2 = Population(100, num_es=2, seed=0)
+    for _ in range(10):
+        pop2.sample_cohort(10, "pareto")
+    assert pop2.part_count.max() == pop2.part_count.min() == 1
+    # rate bias: clients with much better channels are sampled more often
+    pop3 = Population(100, num_es=2, seed=0)
+    pop3.rate_scale = np.where(np.arange(100) < 50, 10.0, 0.1)
+    for _ in range(20):
+        pop3.sample_cohort(10, "rate")
+    fast = pop3.part_count[:50].sum()
+    assert fast > 0.8 * pop3.part_count.sum()
+
+
+def test_population_es_balanced_cohort():
+    pop = Population(64, num_es=4, seed=1)
+    ids = pop.sample_cohort(8, "uniform", es_balanced=True)
+    # two per ES, concatenated in ES order -> slot i's home ES is i // 2
+    assert np.array_equal(pop.es_assign[ids], np.arange(8) // 2)
+    with pytest.raises(ValueError):
+        pop.sample_cohort(6, "uniform", es_balanced=True)  # 6 % 4 != 0
+    with pytest.raises(ValueError):
+        pop.sample_cohort(12, "bogus")
+
+
+def test_cohort_scheduler_population_mode():
+    """End to end on a 64-client registry: only cohort members schedule,
+    the whole registry's energy state advances, and state_dict resume is
+    bit-identical."""
+    wc = WirelessConfig(model="rayleigh", es_uplink_mbps=12.0,
+                        contention="proportional", **BASE)
+    comm = comm_for_cnn(CNN_CFG, dataset_size=400, batch_size=16)
+
+    def build(pop):
+        return make_cohort_scheduler(wc, 64, comm, 2, population=pop,
+                                     cohort_size=8, sampling="pareto",
+                                     es_balanced=True)
+
+    pop = Population(64, num_es=2, seed=3, assignment="kmeans",
+                     data_sigma=0.5)
+    s = build(pop)
+    for r in range(4):
+        rep = s.step(r)
+        assert set(np.flatnonzero(rep.scheduled)) <= set(s.last_cohort)
+        view = cohort_report(rep, s.last_cohort)
+        assert view.mask.shape == (8,)
+        assert np.array_equal(view.scheduled,
+                              rep.scheduled[s.last_cohort])
+        assert view.round_time_s == rep.round_time_s
+    assert pop.part_count.sum() == 32 and pop.part_count.max() <= 1
+    st = s.state_dict()
+    pop2 = Population(64, num_es=2, seed=3, assignment="kmeans",
+                      data_sigma=0.5)
+    s2 = build(pop2)
+    s2.load_state_dict(st)
+    for r in range(4, 7):
+        _assert_reports_equal(s.step(r), s2.step(r), f"pop resume r{r}")
+        assert np.array_equal(s.last_cohort, s2.last_cohort)
+
+
+def test_cohort_scheduler_rejects_bad_population():
+    wc = WirelessConfig(model="rayleigh", **BASE)
+    comm = comm_for_cnn(CNN_CFG, dataset_size=400, batch_size=16)
+    with pytest.raises(ValueError):        # N != U
+        make_cohort_scheduler(wc, 8, comm, 2,
+                              population=Population(64), cohort_size=8)
+    with pytest.raises(ValueError):        # missing cohort_size
+        make_cohort_scheduler(wc, 64, comm, 2, population=Population(64))
+
+
+# ------------------------------------------------------- FedSim cohorts ----
+def test_fedsim_population_smoke():
+    from repro.core.fedsim import FedSim
+    from repro.data.synthetic import make_federated_image_data
+    fed = make_federated_image_data(4, alpha=0.5, train_per_class=20,
+                                    test_per_class=10, seed=0)
+    h = HierarchyConfig(num_edge_servers=2, clients_per_es=2, kappa0=1,
+                        kappa1=2, global_rounds=2)
+    t = TrainConfig(learning_rate=0.05, batch_size=8, freeze_head=True)
+    w = WirelessConfig(model="rayleigh", es_uplink_mbps=12.0,
+                       contention="proportional", deadline_s=2.0, **{
+                           k: v for k, v in BASE.items()
+                           if k != "deadline_s"})
+
+    def build(pop):
+        return FedSim(CNN_CFG, fed, h, t, batches_per_epoch=1, seed=0,
+                      wireless=w, population=pop, sampling="rate")
+
+    pop = Population(64, num_es=2, seed=3, assignment="kmeans",
+                     data_sigma=0.5)
+    sim = build(pop)
+    res = sim.run(rounds=2, log_every=1)
+    assert len(res.network) == 4           # kappa1 * global_rounds
+    assert pop.part_count.sum() == 16      # 4 edge rounds x cohort of 4
+    assert (pop.head_slot >= 0).sum() > 0  # participants got the model
+    # per-slot report rows came from the cohort view, not the registry
+    assert all(r["scheduled"] <= 4 for r in res.network)
+    # checkpoint resume into a FRESH sim + population: bit-identical
+    st = sim.state_dict()
+    sim2 = build(Population(64, num_es=2, seed=3, assignment="kmeans",
+                            data_sigma=0.5))
+    sim2.load_state_dict(st)
+    r1, r2 = sim.run(rounds=3, log_every=3), sim2.run(rounds=3, log_every=3)
+    import jax
+    for a, b in zip(jax.tree.leaves(r1.global_params),
+                    jax.tree.leaves(r2.global_params)):
+        assert (np.asarray(a) == np.asarray(b)).all()
+    assert r1.history == r2.history
+
+
+def test_fedsim_population_rejects_staleness_and_ideal():
+    from repro.core.fedsim import FedSim
+    from repro.data.synthetic import make_federated_image_data
+    fed = make_federated_image_data(4, alpha=0.5, train_per_class=10,
+                                    test_per_class=5, seed=0)
+    h = HierarchyConfig(num_edge_servers=2, clients_per_es=2, kappa0=1,
+                        kappa1=1, global_rounds=1)
+    t = TrainConfig(learning_rate=0.05, batch_size=8)
+    pop = Population(64, num_es=2, seed=0)
+    with pytest.raises(ValueError):
+        FedSim(CNN_CFG, fed, h, t, population=pop)       # no wireless
+    with pytest.raises(ValueError):
+        FedSim(CNN_CFG, fed, h, t, population=pop,
+               wireless=WirelessConfig(model="rayleigh",
+                                       staleness_lambda=0.5, **BASE))
+    with pytest.raises(ValueError):                      # B mismatch
+        FedSim(CNN_CFG, fed, h, t,
+               population=Population(64, num_es=4, seed=0),
+               wireless=WirelessConfig(model="rayleigh", **BASE))

@@ -214,6 +214,72 @@ class TestAstCheckers:
         """)
 
 
+# ----------------------------------------- client loops in vectorized code
+class TestClientLoopInWireless:
+    WIRELESS = "src/repro/wireless/population.py"
+
+    def _rules(self, snippet, path=None):
+        findings = astchecks.check_source(textwrap.dedent(snippet),
+                                          path or self.WIRELESS)
+        return [f.rule for f in findings]
+
+    def test_range_over_client_axis_flagged(self):
+        # the exact regression the struct-of-arrays refactor removed
+        assert "client-loop-in-wireless" in self._rules("""
+            def step(self):
+                for u in range(self.U):
+                    self.energy_left[u] -= 1.0
+        """)
+
+    def test_comprehension_over_cohort_flagged(self):
+        assert "client-loop-in-wireless" in self._rules("""
+            def masks(self, cohort):
+                return [self.one_mask(c) for c in cohort]
+        """)
+
+    def test_enumerate_num_clients_flagged(self):
+        assert "client-loop-in-wireless" in self._rules("""
+            def scan(num_clients):
+                for i, _ in enumerate(range(num_clients)):
+                    pass
+        """)
+
+    def test_non_client_loops_clean(self):
+        # ES loops, Lloyd iterations, and chunk tails are NOT client loops
+        assert not self._rules("""
+            def kmeans(self, coords, k, iters):
+                for _ in range(int(iters)):
+                    pass
+                for b in range(k):
+                    pass
+                for es in range(self.num_es):
+                    pass
+                for i in range(1, n_chunks):
+                    pass
+                return [pool for pool in self._by_es]
+        """)
+
+    def test_other_modules_unconstrained(self):
+        # the oracle scheduler and everything else may loop freely
+        snippet = """
+            def step(self):
+                for u in range(self.U):
+                    pass
+        """
+        assert not self._rules(snippet,
+                               path="src/repro/wireless/scheduler.py")
+        assert not self._rules(snippet, path="src/repro/core/fedsim.py")
+
+    def test_real_vectorized_modules_stay_clean(self):
+        import pathlib
+        root = pathlib.Path(__file__).resolve().parents[1]
+        for mod in ("population.py", "scheduler_core.py"):
+            p = root / "src" / "repro" / "wireless" / mod
+            src = p.read_text()
+            assert not [f for f in astchecks.check_source(src, str(p))
+                        if f.rule == "client-loop-in-wireless"], mod
+
+
 # ----------------------------------------------------------- suppressions
 class TestSuppressions:
     SNIPPET = textwrap.dedent("""

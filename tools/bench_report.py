@@ -30,8 +30,9 @@ import sys
 # the unified row schema, in column order
 COLUMNS = ["source", "label", "participation_rate",
            "effective_participation_rate", "mean_round_time_s",
-           "total_bits", "retx_bits", "failed", "crashed", "stale_delivered",
-           "final_loss", "final_acc", "total_sim_time_s"]
+           "wall_s_per_round", "total_bits", "retx_bits", "failed",
+           "crashed", "stale_delivered", "final_loss", "final_acc",
+           "total_sim_time_s"]
 
 # metric keys that must be numeric when present (post-normalization)
 _NUMERIC = COLUMNS[2:]

@@ -33,6 +33,14 @@ Rules (see engine.RULES / README.md):
   or defaults to an enabled value.  Observability (``repro.telemetry``)
   must be strictly opt-in: the all-defaults call of every instrumented
   entry point has to be bit-inert, or the goldens run instrumented.
+- ``client-loop-in-wireless`` — a python ``for`` loop (or comprehension)
+  over the CLIENT axis inside the vectorized wireless modules
+  (``wireless/population.py``, ``wireless/scheduler_core.py``).  Those
+  modules exist to keep per-round python work O(1) in the number of
+  registered clients; an innocent ``for u in range(self.U)`` there is a
+  10**6-iteration regression.  Loops over other axes (edge servers,
+  k-means iterations, chunk tails) are fine — only loops whose range/
+  iterable names a client-axis quantity are flagged.
 """
 
 from __future__ import annotations
@@ -80,6 +88,7 @@ def check_source(source: str, path: str) -> list[Finding]:
     out += _check_float64(tree, path)
     out += _check_fault_free_default(tree, path)
     out += _check_telemetry_off_default(tree, path)
+    out += _check_client_loop(tree, path)
     return out
 
 
@@ -533,6 +542,71 @@ def _check_fault_free_default(tree: ast.Module, path: str) -> list[Finding]:
 # ---------------------------------------------------------------------------
 # telemetry-off-default
 # ---------------------------------------------------------------------------
+# ---------------------------------------------------------------------------
+# client-loop-in-wireless
+# ---------------------------------------------------------------------------
+# the modules whose contract is O(1) python per round in the client count
+_VECTORIZED_WIRELESS = {"population.py", "scheduler_core.py"}
+# quantities that name the client axis when they appear in a range() bound
+_CLIENT_AXIS = {"U", "N", "num_clients", "n_clients", "population_size",
+                "cohort_size"}
+# iterables that ARE per-client collections
+_CLIENT_ITERS = {"clients", "cohort", "cohort_ids", "client_ids"}
+
+
+def _terminal_names(node: ast.AST):
+    """Every bare name and attribute terminal in an expression (``self.U``
+    yields 'U'; ``len(pool)`` yields 'len' and 'pool')."""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name):
+            yield sub.id
+        elif isinstance(sub, ast.Attribute):
+            yield sub.attr
+
+
+def _client_loop_iter(it: ast.AST) -> bool:
+    """Does this ``for``/comprehension iterable walk the client axis?"""
+    if isinstance(it, ast.Call):
+        chain = _attr_chain(it.func)
+        if chain and chain[-1] in ("range", "enumerate", "zip"):
+            return any(n in _CLIENT_AXIS or n in _CLIENT_ITERS
+                       for a in it.args for n in _terminal_names(a))
+        return False
+    return any(n in _CLIENT_ITERS for n in _terminal_names(it))
+
+
+def _check_client_loop(tree: ast.Module, path: str) -> list[Finding]:
+    """No python-level per-client loops in the vectorized wireless modules.
+
+    ``population.py`` / ``scheduler_core.py`` promise O(1) python work per
+    round no matter how many clients are registered — that is the whole
+    point of the struct-of-arrays refactor.  A ``for u in range(self.U)``
+    (or a comprehension over a cohort) quietly reintroduces the
+    10**6-iteration python loop the fused jax stages replaced.  Loops over
+    non-client axes (edge servers, Lloyd iterations, chunk tails) pass."""
+    parts = path.replace("\\", "/").split("/")
+    if parts[-1] not in _VECTORIZED_WIRELESS or (
+            len(parts) > 1 and "wireless" not in parts):
+        return []
+    out = []
+    for node in ast.walk(tree):
+        iters = []
+        if isinstance(node, (ast.For, ast.AsyncFor)):
+            iters = [(node.iter, node.lineno)]
+        elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                               ast.GeneratorExp)):
+            iters = [(g.iter, node.lineno) for g in node.generators]
+        for it, line in iters:
+            if _client_loop_iter(it):
+                out.append(Finding(
+                    "client-loop-in-wireless", path, line,
+                    "python-level loop over the client axis in a "
+                    "vectorized wireless module: per-round python work "
+                    "must stay O(1) in the registered-client count "
+                    "(use numpy/jax vector ops)"))
+    return out
+
+
 def _is_off_default(node: ast.AST) -> bool:
     """None, or the canonical OFF handle Telemetry.disabled()."""
     if isinstance(node, ast.Constant) and node.value is None:

@@ -46,6 +46,10 @@ RULES: dict[str, Rule] = {r.id: r for r in (
     Rule("telemetry-off-default", "a 'telemetry' parameter is required or "
          "defaults to an enabled value (observability must be opt-in: "
          "telemetry=None keeps instrumented code bit-inert)", "ast"),
+    Rule("client-loop-in-wireless", "a python-level loop over the client "
+         "axis in the vectorized wireless modules (population/"
+         "scheduler_core must stay O(1) python per round at 10**6 "
+         "clients)", "ast"),
     # --- layer 2: Pallas kernel contracts --------------------------------
     Rule("pallas-triplet", "a kernels/<name>/ package is missing one of "
          "kernel.py / ref.py / ops.py", "pallas"),
